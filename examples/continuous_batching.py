@@ -1,0 +1,76 @@
+"""Continuous batching with the paged KV-cache manager.
+
+Simulates a serving shift: requests with mixed prompt/output lengths arrive
+over time; the PagedKVManager admits what fits, pages grow as sequences
+decode, finished requests release pages for the queue. Reports throughput,
+utilization, and internal fragmentation — the serving-side counterpart of
+the training fault-tolerance story.
+
+Run:  PYTHONPATH=src python examples/continuous_batching.py
+"""
+import random
+
+from repro.serve.kv_cache import PagedCacheConfig, PagedKVManager
+
+
+def main():
+    rng = random.Random(0)
+    cfg = PagedCacheConfig(num_pages=256, page_size=16)  # 4096 token slots
+    mgr = PagedKVManager(cfg)
+
+    queue = [
+        {"rid": i, "prompt": rng.randint(16, 256), "out": rng.randint(8, 128)}
+        for i in range(64)
+    ]
+    active: dict[int, dict] = {}
+    done = 0
+    steps = 0
+    tokens = 0
+    peak_util = 0.0
+
+    while queue or active:
+        steps += 1
+        # admit from the head of the queue while space allows
+        while queue and mgr.can_admit(queue[0]["prompt"]):
+            req = queue.pop(0)
+            assert mgr.admit(req["rid"], req["prompt"])
+            req["generated"] = 0
+            active[req["rid"]] = req
+        # one decode step for every active request
+        finished = []
+        progressed = 0
+        for rid, req in active.items():
+            if not mgr.extend(rid, 1):
+                continue  # out of pages this step; retried next step
+            progressed += 1
+            req["generated"] += 1
+            tokens += 1
+            if req["generated"] >= req["out"]:
+                finished.append(rid)
+        for rid in finished:
+            mgr.free_request(rid)
+            active.pop(rid)
+            done += 1
+        if progressed == 0 and active:
+            # every active request is page-blocked: preempt the youngest
+            # (vLLM-style) — its pages recycle, it re-enters the queue
+            rid = max(active, key=lambda r: active[r]["rid"])
+            req = active.pop(rid)
+            mgr.free_request(rid)
+            req.pop("generated", None)
+            queue.insert(0, {"rid": req["rid"], "prompt": req["prompt"],
+                             "out": req["out"]})
+            print(f"step {steps:4d}: preempted request {rid}")
+        peak_util = max(peak_util, mgr.utilization())
+        if steps % 25 == 0 or not (queue or active):
+            print(f"step {steps:4d}: active={len(active):3d} queued={len(queue):3d} "
+                  f"done={done:3d} util={mgr.utilization():.2f} "
+                  f"frag={mgr.fragmentation():.2f}")
+
+    print(f"\nserved 64 requests in {steps} decode steps "
+          f"({tokens} tokens, batch-avg {tokens/steps:.1f} tok/step); "
+          f"peak page utilization {peak_util:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Weight compression via CP decomposition — the paper's kernel applied to
+the LM zoo.
+
+Stacked MoE expert weights form a natural 3-mode tensor (experts, d_model,
+d_ff). CP-ALS (MTTKRP inner kernel — exactly what the pSRAM array
+accelerates) decomposes it; we report compression ratio, reconstruction
+error, and the end-to-end logits drift when the compressed weights are
+swapped back into the model.
+
+Run:  PYTHONPATH=src python examples/decompose_weights.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.cp_als import cp_als, reconstruct
+from repro.models.registry import get_config, get_module
+
+
+def main():
+    cfg = get_config("granite_moe_1b_a400m").reduced()
+    mod = get_module(cfg)
+    params = mod.init(jax.random.PRNGKey(0), cfg)
+
+    w = params["blocks"]["layer0"]["mlp"]["wi"][0].astype(jnp.float32)  # (E, d, ff)
+    e, d, ff = w.shape
+    print(f"decomposing stacked expert tensor {w.shape}")
+    for rank in (8, 16, 32):
+        st = cp_als(w, rank=rank, n_iter=60, key=jax.random.PRNGKey(1))
+        approx = reconstruct(st.factors, st.lambdas)
+        rel = float(jnp.linalg.norm(approx - w) / jnp.linalg.norm(w))
+        orig = e * d * ff
+        comp = rank * (e + d + ff)
+        print(f"  rank {rank:3d}: fit={st.fit:.3f} rel_err={rel:.3f} "
+              f"compression {orig/comp:6.1f}x")
+
+    # swap the rank-32 approximation into the model, measure logits drift
+    st = cp_als(w, rank=32, n_iter=60, key=jax.random.PRNGKey(1))
+    approx = reconstruct(st.factors, st.lambdas).astype(params["blocks"]["layer0"]["mlp"]["wi"].dtype)
+    p2 = jax.tree.map(lambda x: x, params)  # shallow copy
+    p2["blocks"]["layer0"]["mlp"]["wi"] = (
+        params["blocks"]["layer0"]["mlp"]["wi"].at[0].set(approx)
+    )
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0, cfg.vocab_size)
+    l1 = mod.forward(params, toks, cfg)
+    l2 = mod.forward(p2, toks, cfg)
+    drift = float(jnp.linalg.norm(l2 - l1) / jnp.linalg.norm(l1))
+    print(f"end-to-end logits drift with compressed layer-0 experts: {drift:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Fault-tolerant checkpointing: atomic, asynchronous, reshard-on-load.
+
+Layout (filesystem only — no external deps):
+
+    <dir>/step_000123/
+        arrays.npz          flattened leaf arrays (host-local shard on
+                            multi-host: each host writes arrays_h<k>.npz)
+        tree.json           treedef paths + shapes + dtypes
+        done                commit marker (written last — a dir without it
+                            is an aborted save and is ignored/GC'd)
+    <dir>/latest            text file holding the newest committed step
+
+Async: `save()` snapshots to host RAM (device_get) synchronously — cheap —
+then a daemon thread serializes to disk, so the train loop is blocked only
+for the copy, not the I/O. `restore()` reads the newest committed step and
+re-shards: arrays are loaded on host then placed with the *current* mesh's
+NamedShardings, so the run may resume on a different mesh shape (elastic
+restart after losing a pod).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [("/".join(str(k) for k in path), leaf) for path, leaf in flat]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, host_index: int = 0):
+        self.dir = directory
+        self.keep = keep
+        self.host_index = host_index
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ---------------- save ----------------
+    def save(self, step: int, tree, blocking: bool = False):
+        """Snapshot now, write in the background."""
+        self.wait()  # one in-flight save at a time
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if blocking:
+            self._write(step, host_tree)
+        else:
+            self._thread = threading.Thread(target=self._write, args=(step, host_tree), daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree):
+        sdir = os.path.join(self.dir, f"step_{step:09d}")
+        tmp = sdir + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp, exist_ok=True)
+        items = _flatten_with_paths(host_tree)
+        arrays = {f"a{i}": leaf for i, (_, leaf) in enumerate(items)}
+        np.savez(os.path.join(tmp, f"arrays_h{self.host_index}.npz"), **arrays)
+        meta = {
+            "paths": [p for p, _ in items],
+            "shapes": [list(np.shape(l)) for _, l in items],
+            "dtypes": [str(np.asarray(l).dtype) for _, l in items],
+            "step": step,
+        }
+        with open(os.path.join(tmp, "tree.json"), "w") as f:
+            json.dump(meta, f)
+        with open(os.path.join(tmp, "done"), "w") as f:
+            f.write("ok")
+        if os.path.exists(sdir):
+            shutil.rmtree(sdir)
+        os.rename(tmp, sdir)
+        with open(os.path.join(self.dir, "latest.tmp"), "w") as f:
+            f.write(str(step))
+        os.replace(os.path.join(self.dir, "latest.tmp"), os.path.join(self.dir, "latest"))
+        self._gc()
+
+    def _gc(self):
+        steps = self.committed_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"), ignore_errors=True)
+        # drop aborted saves
+        for name in os.listdir(self.dir):
+            if name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, name), ignore_errors=True)
+
+    # ---------------- restore ----------------
+    def committed_steps(self) -> list[int]:
+        out = []
+        for name in sorted(os.listdir(self.dir)):
+            if name.startswith("step_") and os.path.exists(os.path.join(self.dir, name, "done")):
+                out.append(int(name.split("_")[1]))
+        return out
+
+    def latest_step(self) -> int | None:
+        p = os.path.join(self.dir, "latest")
+        if os.path.exists(p):
+            s = int(open(p).read().strip())
+            if os.path.exists(os.path.join(self.dir, f"step_{s:09d}", "done")):
+                return s
+        steps = self.committed_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like_tree, step: int | None = None, shardings=None):
+        """Load into the structure of `like_tree`; device-put with
+        `shardings` (same-structure pytree of NamedShardings) when given —
+        this is the elastic re-shard path."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        sdir = os.path.join(self.dir, f"step_{step:09d}")
+        data = np.load(os.path.join(sdir, f"arrays_h{self.host_index}.npz"))
+        meta = json.load(open(os.path.join(sdir, "tree.json")))
+        by_path = {p: data[f"a{i}"] for i, p in enumerate(meta["paths"])}
+        flat = _flatten_with_paths(like_tree)
+        leaves = []
+        for path, like in flat:
+            arr = by_path[path]
+            assert tuple(arr.shape) == tuple(np.shape(like)), (path, arr.shape, np.shape(like))
+            leaves.append(arr)
+        treedef = jax.tree.structure(like_tree)
+        tree = jax.tree.unflatten(treedef, leaves)
+        if shardings is not None:
+            flat_sh = jax.tree.leaves(
+                shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding)
+            )
+            tree = jax.tree.unflatten(
+                treedef,
+                [jax.device_put(l, s) for l, s in zip(jax.tree.leaves(tree), flat_sh)],
+            )
+        else:
+            tree = jax.tree.map(jnp.asarray, tree)
+        return tree, step

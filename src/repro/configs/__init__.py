@@ -1,0 +1,2 @@
+"""Architecture configs: one module per assigned arch (exact public configs)
+plus the paper's own pSRAM/MTTKRP workload."""

@@ -1,0 +1,20 @@
+"""The paper's own workload: MTTKRP / CP-ALS on the pSRAM array (§V).
+
+Not an LM arch — this config parameterizes the tensor-decomposition driver
+and the predictive performance model at the paper's operating point.
+"""
+import dataclasses
+
+from repro.core.perf_model import MTTKRPWorkload
+from repro.core.psram import PsramConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperConfig:
+    array: PsramConfig = dataclasses.field(default_factory=PsramConfig)
+    workload: MTTKRPWorkload = dataclasses.field(default_factory=MTTKRPWorkload)
+    rank: int = 32
+    adc_bits: int = 16
+
+
+CONFIG = PaperConfig()

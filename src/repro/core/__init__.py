@@ -1,0 +1,39 @@
+"""Core: the paper's contribution — pSRAM array model, CP1-3 primitives,
+MTTKRP, CP-ALS, the predictive performance model, and the photonic-offload
+projection layer."""
+from .cp_als import CPState, cp_als, cp_als_psram, init_factors, reconstruct
+from .mttkrp import (
+    dense_to_coo,
+    khatri_rao,
+    matricize,
+    mttkrp_dense,
+    mttkrp_dense_kr,
+    mttkrp_sparse,
+    mttkrp_sparse_psram,
+)
+from .perf_model import (
+    MTTKRPWorkload,
+    peak_ops,
+    peak_petaops,
+    sustained_mttkrp,
+    sweep_channels,
+    sweep_frequency,
+    time_to_solution_s,
+    tpu_mttkrp_time_s,
+)
+from .photonic_layer import maybe_psram_matmul, program_weights, psram_linear
+from .psram import PsramArray, PsramConfig, matmul_via_array
+from .scaling import FabricSpec, ScalingPoint, knee, scale, sweep
+from .quantization import (
+    ADCConfig,
+    QMAX,
+    WORD_BITS,
+    dequantize,
+    fake_quant,
+    from_bitplanes,
+    psram_quantized_matmul,
+    quantize_symmetric,
+    to_bitplanes,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,117 @@
+"""CP-ALS (Algorithm 1 of the paper): Canonical Polyadic Decomposition via
+alternating least squares, with MTTKRP as the inner kernel.
+
+Each mode update solves  A_n <- MTTKRP_n(X, factors) @ pinv(hadamard of grams)
+followed by column normalization; fit is tracked against ||X||. The MTTKRP
+backend is pluggable: exact float, pSRAM-quantized, sparse COO, or the Pallas
+TPU kernel — this is how the paper's engine slots into the framework as a
+first-class feature.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .mttkrp import khatri_rao, mttkrp_dense, mttkrp_sparse, mttkrp_sparse_psram
+
+
+@dataclasses.dataclass
+class CPState:
+    factors: list[jax.Array]     # [(I_n, R)]
+    lambdas: jax.Array           # (R,) column norms
+    fit: float
+    iters: int
+
+
+def init_factors(key: jax.Array, shape: tuple[int, ...], rank: int) -> list[jax.Array]:
+    keys = jax.random.split(key, len(shape))
+    return [jax.random.uniform(k, (s, rank)) for k, s in zip(keys, shape)]
+
+
+def reconstruct(factors: list[jax.Array], lambdas: jax.Array | None = None) -> jax.Array:
+    """Full tensor from its CP factors (small tensors only)."""
+    rank = factors[0].shape[1]
+    lam = jnp.ones((rank,)) if lambdas is None else lambdas
+    kr = khatri_rao(factors[1:])                      # (prod I_1.., R)
+    mat = (factors[0] * lam) @ kr.T                   # (I_0, prod)
+    return mat.reshape([f.shape[0] for f in factors])
+
+
+def _gram_hadamard(factors, skip):
+    out = None
+    for d, f in enumerate(factors):
+        if d == skip:
+            continue
+        g = f.T @ f
+        out = g if out is None else out * g
+    return out
+
+
+def cp_als(
+    x: jax.Array | None,
+    rank: int,
+    n_iter: int = 25,
+    key: jax.Array | None = None,
+    mttkrp_fn: Callable | None = None,
+    coo: tuple[jax.Array, jax.Array, tuple[int, ...]] | None = None,
+    tol: float = 1e-7,
+) -> CPState:
+    """Run CP-ALS. Either ``x`` (dense) or ``coo=(indices, values, shape)``.
+
+    mttkrp_fn(x_or_coo, factors, mode) -> (I_mode, R); defaults to the exact
+    dense path / sparse segment-sum path.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if coo is not None:
+        indices, values, shape = coo
+        norm_x = jnp.linalg.norm(values)
+        default_fn = lambda _, fs, m: mttkrp_sparse(
+            indices, values, tuple(fs), m, shape[m]
+        )
+    else:
+        shape = x.shape
+        norm_x = jnp.linalg.norm(x)
+        default_fn = lambda t, fs, m: mttkrp_dense(t, fs, m)
+    fn = mttkrp_fn or default_fn
+
+    factors = init_factors(key, tuple(shape), rank)
+    lam = jnp.ones((rank,))
+    prev_fit, fit = -1.0, 0.0
+    it = 0
+    for it in range(1, n_iter + 1):
+        for mode in range(len(shape)):
+            m = fn(x, factors, mode)                      # MTTKRP
+            g = _gram_hadamard(factors, mode)             # (R, R)
+            a = m @ jnp.linalg.pinv(g)
+            lam = jnp.maximum(jnp.linalg.norm(a, axis=0), 1e-12)
+            factors[mode] = a / lam
+        # fit = 1 - ||X - X_hat|| / ||X||, via the standard inner-product trick
+        g_all = _gram_hadamard(factors, skip=-1) * jnp.outer(lam, lam)
+        # <X, X_hat> reuses the final-mode MTTKRP (m is MTTKRP for last mode)
+        inner = jnp.sum((m) * (factors[-1] * lam))
+        norm_hat_sq = jnp.sum(g_all)
+        resid = jnp.sqrt(jnp.maximum(norm_x**2 + norm_hat_sq - 2 * inner, 0.0))
+        fit = float(1.0 - resid / norm_x)
+        if abs(fit - prev_fit) < tol:
+            break
+        prev_fit = fit
+    return CPState(factors=factors, lambdas=lam, fit=fit, iters=it)
+
+
+def cp_als_psram(
+    coo: tuple[jax.Array, jax.Array, tuple[int, ...]],
+    rank: int,
+    n_iter: int = 25,
+    key: jax.Array | None = None,
+    adc_bits: int = 16,
+) -> CPState:
+    """CP-ALS with the MTTKRP kernel running through the pSRAM numerics."""
+    indices, values, shape = coo
+    fn = lambda _, fs, m: mttkrp_sparse_psram(
+        indices, values, tuple(fs), m, shape[m], adc_bits=adc_bits
+    )
+    return cp_als(None, rank, n_iter=n_iter, key=key, mttkrp_fn=fn, coo=coo)

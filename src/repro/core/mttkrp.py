@@ -1,0 +1,147 @@
+"""MTTKRP — Matricized Tensor Times Khatri-Rao Product — dense & sparse, in JAX.
+
+For a 3-mode tensor X (I,J,K) and factors B (J,R), C (K,R), mode-0 MTTKRP is
+
+    A(i,r) = sum_{j,k} X(i,j,k) * B(j,r) * C(k,r)
+           = X_(0) @ (C ⊙ B)        (⊙ = Khatri-Rao / column-wise Kronecker)
+
+Paths provided (all N-mode generic):
+  * ``mttkrp_dense``        — exact einsum chain (contracts one mode at a
+                              time: O(nnz·R) work, never materializes ⊙).
+  * ``mttkrp_dense_kr``     — the textbook matricized form (materializes the
+                              Khatri-Rao product; used as an oracle).
+  * ``mttkrp_sparse``       — COO segment-sum; this is the paper's CP1→CP2→CP3
+                              chain vectorized over nonzeros.
+  * ``mttkrp_sparse_psram`` — same chain through the pSRAM quantized numerics
+                              (what the array would produce, §IV / Fig. 4).
+The Pallas TPU kernel lives in kernels/mttkrp.py and is validated against
+``mttkrp_dense_kr``.
+"""
+from __future__ import annotations
+
+import string
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .quantization import ADCConfig, QMAX, adc_requantize, quantize_symmetric
+
+
+def khatri_rao(mats: list[jax.Array]) -> jax.Array:
+    """Column-wise Kronecker product: (prod(I_n), R) from [(I_n, R)]."""
+    out = mats[0]
+    for m in mats[1:]:
+        out = (out[:, None, :] * m[None, :, :]).reshape(-1, out.shape[-1])
+    return out
+
+
+def matricize(x: jax.Array, mode: int) -> jax.Array:
+    """Mode-n unfolding X_(n): (I_n, prod of the other dims in order)."""
+    order = [mode] + [d for d in range(x.ndim) if d != mode]
+    return jnp.transpose(x, order).reshape(x.shape[mode], -1)
+
+
+def mttkrp_dense(x: jax.Array, factors: list[jax.Array], mode: int) -> jax.Array:
+    """Exact dense MTTKRP via a single einsum (mode-generic)."""
+    n = x.ndim
+    letters = string.ascii_lowercase
+    tensor_ix = letters[:n]
+    r = "r"
+    operands, subs = [x], [tensor_ix]
+    for d in range(n):
+        if d == mode:
+            continue
+        operands.append(factors[d])
+        subs.append(letters[d] + r)
+    expr = ",".join(subs) + "->" + letters[mode] + r
+    return jnp.einsum(expr, *operands)
+
+
+def mttkrp_dense_kr(x: jax.Array, factors: list[jax.Array], mode: int) -> jax.Array:
+    """Oracle: X_(n) @ KhatriRao(other factors) — materializes the KR operand.
+
+    Column ordering of the unfolding follows :func:`matricize` (other modes in
+    increasing order, row-major), so the KR factor list uses the same order.
+    """
+    others = [factors[d] for d in range(x.ndim) if d != mode]
+    return matricize(x, mode) @ khatri_rao(others)
+
+
+# ---------------------------------------------------------------------------
+# sparse (COO)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("mode", "out_rows"))
+def mttkrp_sparse(
+    indices: jax.Array,        # (nnz, nmodes) int32
+    values: jax.Array,         # (nnz,) float
+    factors: tuple,            # tuple of (I_n, R)
+    mode: int,
+    out_rows: int,
+) -> jax.Array:
+    """COO MTTKRP = the paper's CP1→CP2→CP3 chain vectorized over nonzeros.
+
+    CP1: Hadamard of the gathered factor rows of all non-target modes.
+    CP2: scale by the nonzero value.
+    CP3: scatter-add into the target factor row (segment sum).
+    """
+    nmodes = len(factors)
+    had = None
+    for d in range(nmodes):
+        if d == mode:
+            continue
+        rows = factors[d][indices[:, d]]            # (nnz, R)  gather
+        had = rows if had is None else had * rows   # CP 1
+    scaled = values[:, None] * had                  # CP 2
+    return jax.ops.segment_sum(scaled, indices[:, mode], num_segments=out_rows)  # CP 3
+
+
+@partial(jax.jit, static_argnames=("mode", "out_rows", "adc_bits"))
+def mttkrp_sparse_psram(
+    indices: jax.Array,
+    values: jax.Array,
+    factors: tuple,
+    mode: int,
+    out_rows: int,
+    adc_bits: int = 16,
+) -> jax.Array:
+    """COO MTTKRP through the pSRAM array numerics (§IV, Figs. 3-4).
+
+    Each CP1/CP2 product passes through 8-bit operand quantization and the
+    ADC; CP3 accumulates post-ADC in the electrical domain (exact adds).
+    Quantization granularity mirrors the array: the *stored* operand gets a
+    per-row scale (one array column per factor row), the *driven* operand a
+    per-vector intensity scale.
+    """
+    adc = ADCConfig(bits=adc_bits)
+    nmodes = len(factors)
+    others = [d for d in range(nmodes) if d != mode]
+
+    def q(v, axis):
+        qv, s = quantize_symmetric(v, axis=axis)
+        return qv.astype(jnp.int32), s
+
+    # CP 1 over (possibly >2) non-target modes: fold pairwise through the ADC
+    rows0, s0 = q(factors[others[0]][indices[:, others[0]]], axis=-1)
+    had = rows0.astype(jnp.float32) * s0
+    for d in others[1:]:
+        qa, sa = q(had, -1)
+        qb, sb = q(factors[d][indices[:, d]], -1)
+        prod = qa * qb
+        prod = adc_requantize(prod, adc, float(QMAX) * float(QMAX))
+        had = prod * (sa * sb)
+    # CP 2
+    qv, sv = q(values[:, None], -1)
+    qh, sh = q(had, -1)
+    scaled = adc_requantize(qv * qh, adc, float(QMAX) * float(QMAX)) * (sv * sh)
+    # CP 3 — exact electrical accumulation
+    return jax.ops.segment_sum(scaled, indices[:, mode], num_segments=out_rows)
+
+
+def dense_to_coo(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """All-entries COO of a dense tensor (for cross-checking paths)."""
+    idx = jnp.stack(
+        jnp.meshgrid(*[jnp.arange(s) for s in x.shape], indexing="ij"), axis=-1
+    ).reshape(-1, x.ndim)
+    return idx.astype(jnp.int32), x.reshape(-1)

@@ -1,0 +1,70 @@
+"""PsramLinear — photonic-offload projection layer for the LM model zoo.
+
+Simulates offloading a dense projection (attention q/k/v/o, MLP, expert or
+Mamba in/out matmul) onto the pSRAM engine: weights are held as 8-bit words
+(bit-planes + differential sign) with per-output-column scales, activations
+are intensity-encoded to 8-bit on the fly, accumulation passes the ADC model.
+
+Numerically this is the same transfer function as core.quantization.
+psram_quantized_matmul, but batched/shaped for model use and with the weight
+quantization done once at "programming" time (weights are stationary in the
+array; only inputs stream). A Pallas TPU kernel with identical semantics is
+kernels/psram_matmul.py — `use_kernel=True` routes through it.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .quantization import ADCConfig, QMAX, adc_requantize, quantize_symmetric
+
+
+def program_weights(w: jax.Array) -> dict:
+    """Quantize a (K, N) weight once, as the array programming step."""
+    q, scale = quantize_symmetric(w, axis=0)  # per-output-column scale (1, N)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+@partial(jax.jit, static_argnames=("adc_bits", "saturate"))
+def psram_linear(
+    x: jax.Array,
+    programmed: dict,
+    adc_bits: int = 16,
+    saturate: bool = True,
+) -> jax.Array:
+    """y = ADC(quant(x) @ q_w) * scales, for x of shape (..., K)."""
+    qw = programmed["q"]
+    k = qw.shape[0]
+    qx, sx = quantize_symmetric(x, axis=-1)  # per-row intensity scale (..., 1)
+    acc = jax.lax.dot_general(
+        qx.astype(jnp.int32),
+        qw.astype(jnp.int32),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    adc = ADCConfig(bits=adc_bits, saturate=saturate)
+    acc = adc_requantize(acc, adc, float(QMAX) * float(QMAX) * k)
+    return acc * (sx * programmed["scale"])
+
+
+def maybe_psram_matmul(x: jax.Array, w: jax.Array, enabled: bool, adc_bits: int = 16) -> jax.Array:
+    """Drop-in for ``x @ w`` in model code; exact matmul when disabled."""
+    if not enabled:
+        return x @ w
+    return psram_linear(x, program_weights(w), adc_bits=adc_bits).astype(x.dtype)
+
+
+def psram_einsum(spec: str, x: jax.Array, w: dict, adc_bits: int = 16) -> jax.Array:
+    """Batched expert einsum through stored-int8 array words.
+
+    spec contracts x's last dim against w["q"]'s middle dim (e.g.
+    "ecd,edf->ecf"); w["scale"] broadcasts over the output.
+    """
+    qx, sx = quantize_symmetric(x, axis=-1)
+    acc = jnp.einsum(spec, qx.astype(jnp.int32), w["q"].astype(jnp.int32))
+    k = x.shape[-1]
+    adc = ADCConfig(bits=adc_bits)
+    acc = adc_requantize(acc, adc, float(QMAX) * float(QMAX) * k)
+    return acc * (sx * w["scale"])

@@ -1,0 +1,171 @@
+"""Functional simulator of the photonic SRAM (pSRAM) crossbar array (§III).
+
+The array is a 2D crossbar of optical bitcells: 256x256 bits organized as
+256 rows x 32 words of 8 bits (§V-A). Word-lines carry WDM-multiplexed,
+intensity-encoded inputs (<=52 wavelength channels on GF45SPCLO); each word
+multiplies its stored 8-bit value by the input on its word-line, and bit-lines
+sum the photocurrent of *identical wavelengths* down each column (§IV-A).
+
+The simulator is bit-exact: every analog step (per-bit product, bit-position
+intensity scaling, photocurrent accumulation, ADC) has an integer-arithmetic
+identity, verified against plain jnp matmuls in tests/test_psram.py.
+
+Wavelength semantics (Fig. 2): a column output is a vector indexed by
+wavelength; words on the same column but driven at different wavelengths do
+NOT sum together. This is what makes CP 1's Hadamard product possible
+(wavelength-interleaved inputs, §IV-C) and what gives the array its
+"hyperspectral" throughput multiplier.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .quantization import (
+    ADCConfig,
+    QMAX,
+    WORD_BITS,
+    adc_requantize,
+    dequantize,
+    quantize_symmetric,
+    to_bitplanes,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class PsramConfig:
+    """Physical configuration of one pSRAM array tile (§V-A defaults)."""
+
+    rows: int = 256                 # word-lines
+    word_cols: int = 32             # words per row (256 bits / 8-bit words)
+    wavelengths: int = 52           # WDM channels available (O-band, 45SPCLO)
+    frequency_ghz: float = 20.0     # write/reconfigure rate of the latch
+    adc: ADCConfig = dataclasses.field(default_factory=ADCConfig)
+
+    @property
+    def bits_per_row(self) -> int:
+        return self.word_cols * WORD_BITS
+
+    @property
+    def words(self) -> int:
+        return self.rows * self.word_cols
+
+    def validate(self) -> None:
+        if self.wavelengths < 1:
+            raise ValueError("need at least one wavelength channel")
+        if self.wavelengths > 52:
+            raise ValueError("GF45SPCLO O-band comb provides at most 52 channels")
+        if self.rows < 1 or self.word_cols < 1:
+            raise ValueError("degenerate array")
+
+
+@dataclasses.dataclass
+class PsramArray:
+    """One programmed array tile.
+
+    ``store`` writes float weights into the bitcells (quantizing to 8-bit
+    words, sign on the differential rail). ``multiply_accumulate`` drives the
+    word-lines with intensity-encoded inputs on per-row wavelength channels
+    and returns the per-(column, wavelength) accumulated, ADC-digitized
+    photocurrents.
+    """
+
+    config: PsramConfig
+    # programmed state
+    sign: jax.Array | None = None      # (rows, word_cols) int8
+    planes: jax.Array | None = None    # (rows, word_cols, WORD_BITS) uint8
+    scale: jax.Array | None = None     # (1, word_cols) float32 per-column scale
+
+    def store(self, w: jax.Array) -> "PsramArray":
+        """Program a (rows, word_cols) float matrix into the bitcells."""
+        self.config.validate()
+        r, c = w.shape
+        if r > self.config.rows or c > self.config.word_cols:
+            raise ValueError(
+                f"matrix {w.shape} exceeds array {self.config.rows}x{self.config.word_cols}"
+            )
+        w = jnp.pad(w, ((0, self.config.rows - r), (0, self.config.word_cols - c)))
+        q, scale = quantize_symmetric(w, axis=0)
+        sign, planes = to_bitplanes(q)
+        return dataclasses.replace(self, sign=sign, planes=planes, scale=scale)
+
+    def stored_values(self) -> jax.Array:
+        """Read back the programmed (dequantized) weights."""
+        shifts = jnp.arange(WORD_BITS, dtype=jnp.int32)
+        mag = jnp.sum(self.planes.astype(jnp.int32) << shifts, axis=-1)
+        return dequantize((self.sign.astype(jnp.int32) * mag).astype(jnp.int8), self.scale)
+
+    def multiply_accumulate(
+        self, intensities: jax.Array, channel_of_row: jax.Array
+    ) -> jax.Array:
+        """Drive the array for one optical cycle.
+
+        intensities:    (rows,) float — intensity-encoded word-line inputs.
+        channel_of_row: (rows,) int32 — which wavelength channel each row's
+                        comb-shaper modulates (values in [0, wavelengths)).
+
+        Returns (word_cols, wavelengths) float32 — per-column, per-wavelength
+        ADC-digitized accumulations. Rows sharing a channel sum together on
+        the bit-line (Fig. 2); rows on distinct channels stay separate.
+        """
+        cfg = self.config
+        qx, sx = quantize_symmetric(intensities)
+        qx = qx.astype(jnp.int32)  # (rows,)
+
+        # per-bit optical product, bit-significance scaling at output encoder
+        shifts = jnp.arange(WORD_BITS, dtype=jnp.int32)
+        word_val = jnp.sum(self.planes.astype(jnp.int32) << shifts, axis=-1)  # (rows, cols)
+        signed_word = self.sign.astype(jnp.int32) * word_val
+        products = qx[:, None] * signed_word  # (rows, cols) integer photocurrents
+
+        # photodetector accumulation: segment-sum rows by wavelength channel
+        onehot = (
+            channel_of_row[:, None] == jnp.arange(cfg.wavelengths)[None, :]
+        ).astype(jnp.int32)  # (rows, wavelengths)
+        acc = jnp.einsum("rc,rw->cw", products, onehot)  # (cols, wavelengths)
+
+        full_scale = float(QMAX) * float(QMAX) * cfg.rows
+        acc = adc_requantize(acc, cfg.adc, full_scale)
+        return acc * (sx * self.scale.reshape(-1, 1))
+
+
+def matmul_via_array(x: jax.Array, w: jax.Array, config: PsramConfig | None = None) -> jax.Array:
+    """Compute ``x @ w`` by tiling it over pSRAM array cycles.
+
+    x: (M, K) float, w: (K, N) float. Each cycle programs a (rows=K-tile,
+    word_cols=N-tile) block and drives one row of x per wavelength... in the
+    dense-matmul mapping all rows share wavelength 0 (the bit-line must sum
+    over K), so WDM instead batches M: up to ``wavelengths`` rows of x are
+    issued per optical cycle on distinct channels — hyperspectral batching.
+
+    This is the slow, physically-faithful path used as an oracle; the fast
+    TPU path is kernels/psram_matmul.py.
+    """
+    cfg = config or PsramConfig()
+    cfg.validate()
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    out = np.zeros((M, N), dtype=np.float32)
+    arr = PsramArray(cfg)
+    for k0 in range(0, K, cfg.rows):
+        k1 = min(k0 + cfg.rows, K)
+        for n0 in range(0, N, cfg.word_cols):
+            n1 = min(n0 + cfg.word_cols, N)
+            tile = arr.store(w[k0:k1, n0:n1])
+            for m0 in range(0, M, cfg.wavelengths):
+                m1 = min(m0 + cfg.wavelengths, M)
+                # issue up to `wavelengths` input vectors, one per channel:
+                # physically these share the array via WDM; numerically each
+                # channel is an independent MAC, so loop and stack.
+                cols = []
+                for m in range(m0, m1):
+                    xt = jnp.zeros((cfg.rows,)).at[: k1 - k0].set(x[m, k0:k1])
+                    chan = jnp.zeros((cfg.rows,), dtype=jnp.int32)
+                    acc = tile.multiply_accumulate(xt, chan)  # (cols, wavelengths)
+                    cols.append(np.asarray(acc[:, 0]))
+                out[m0:m1, n0:n1] += np.stack(cols)[:, : n1 - n0]
+    return jnp.asarray(out)

@@ -1,0 +1,131 @@
+"""Quantization numerics of the photonic SRAM compute engine.
+
+The paper's array (§III) encodes *inputs* as 8-bit intensity levels on the
+word-lines and stores *weights* as binary bit-planes inside 8-bit pSRAM words.
+Per-bit analog products are scaled by bit significance at the output encoder
+and accumulated as photocurrent, then digitized by an on-chip ADC.
+
+Arithmetically the array computes (per column, per wavelength channel)
+
+    y = ADC( sum_rows  x_row * sum_b 2^b * w_{row,b} )  =  ADC( x . w )
+
+i.e. an exact unsigned integer dot product followed by ADC requantization.
+CP-ALS needs signed values; the pSRAM latch is differential (two optical
+rails), so we model signed weights/inputs as symmetric int8 where the sign
+selects the rail. All of this is deterministic and bit-exact on CPU/TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# 8-bit word width of the pSRAM array (§V: 8 bits collected per word).
+WORD_BITS = 8
+QMAX = 2 ** (WORD_BITS - 1) - 1  # 127 — symmetric signed range
+
+
+@dataclasses.dataclass(frozen=True)
+class ADCConfig:
+    """On-chip ADC model (§III-C).
+
+    bits:     ADC resolution. The analog accumulated photocurrent is mapped
+              onto 2**bits levels across the observed dynamic range.
+    saturate: clip instead of wrap when the accumulation exceeds full scale.
+    """
+
+    bits: int = 16
+    saturate: bool = True
+
+    @property
+    def levels(self) -> int:
+        return 2 ** self.bits
+
+
+def quantize_symmetric(x: jax.Array, axis=None) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-axis int8 quantization: x ~= q * scale, q in [-127,127].
+
+    ``axis`` follows jnp.max semantics: None = per-tensor scale, otherwise the
+    reduction axes that share one scale (scale shape keeps those dims as 1).
+    """
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    scale = jnp.maximum(amax, 1e-12) / QMAX
+    q = jnp.clip(jnp.round(x / scale), -QMAX, QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def to_bitplanes(q: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Decompose signed int8 into (sign, bit-planes).
+
+    Returns ``(sign, planes)`` with ``planes[..., b]`` the b-th magnitude bit
+    (uint8 in {0,1}), so that ``q = sign * sum_b planes[...,b] << b``.
+    This mirrors the physical layout: one pSRAM bitcell per plane bit, the
+    sign carried on the differential rail.
+    """
+    q = q.astype(jnp.int32)
+    sign = jnp.sign(q).astype(jnp.int8)
+    mag = jnp.abs(q)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.int32)
+    planes = ((mag[..., None] >> shifts) & 1).astype(jnp.uint8)
+    return sign, planes
+
+
+def from_bitplanes(sign: jax.Array, planes: jax.Array) -> jax.Array:
+    """Inverse of :func:`to_bitplanes`."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.int32)
+    mag = jnp.sum(planes.astype(jnp.int32) << shifts, axis=-1)
+    return (sign.astype(jnp.int32) * mag).astype(jnp.int8)
+
+
+def adc_requantize(acc: jax.Array, adc: ADCConfig, full_scale: jax.Array | float) -> jax.Array:
+    """Digitize an integer/analog accumulation through the ADC transfer curve.
+
+    ``full_scale`` is the analog full-scale value (max representable
+    photocurrent). Values are mapped onto ``2**bits`` uniform levels across
+    [-full_scale, +full_scale] (mid-rise), optionally clipped.
+    """
+    acc = acc.astype(jnp.float32)
+    lsb = 2.0 * full_scale / adc.levels
+    code = jnp.round(acc / lsb)
+    if adc.saturate:
+        half = adc.levels // 2
+        code = jnp.clip(code, -(half - 1), half - 1)
+    return code * lsb
+
+
+def fake_quant(x: jax.Array, axis=None) -> jax.Array:
+    """Quantize-dequantize round trip (straight-through in the backward pass)."""
+    q, scale = quantize_symmetric(jax.lax.stop_gradient(x), axis=axis)
+    y = dequantize(q, scale)
+    # straight-through estimator: identity gradient
+    return x + jax.lax.stop_gradient(y - x)
+
+
+@partial(jax.jit, static_argnames=("adc_bits", "saturate"))
+def psram_quantized_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    adc_bits: int = 16,
+    saturate: bool = True,
+) -> jax.Array:
+    """Reference pSRAM matmul numerics: y ~= x @ w through the array.
+
+    x: (..., K) float — intensity-encoded per-row (per-tensor scale).
+    w: (K, N) float — stored in the array (per-column scale: each array
+       column holds one output word-column, so a per-column scale is free).
+    Returns float32 (..., N) after ADC requantization and dequant.
+    """
+    adc = ADCConfig(bits=adc_bits, saturate=saturate)
+    qx, sx = quantize_symmetric(x)                      # per-tensor
+    qw, sw = quantize_symmetric(w, axis=0)              # per-column, shape (1, N)
+    acc = jnp.matmul(qx.astype(jnp.int32), qw.astype(jnp.int32))
+    # analog full scale: every row at max intensity hitting a full word
+    full_scale = float(QMAX) * float(QMAX) * w.shape[0]
+    acc = adc_requantize(acc, adc, full_scale)
+    return acc * (sx * sw)

@@ -1,0 +1,2 @@
+from .pipeline import DataConfig, DataIterator, batch_at_step
+from .tensors import lowrank_dense, sparse_coo

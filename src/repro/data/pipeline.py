@@ -1,0 +1,71 @@
+"""Deterministic, restart-exact data pipeline.
+
+Batches are a pure function of (seed, step): after a failure/restore at step
+k the stream resumes bit-identically with zero coordination — the property
+fault-tolerant training at thousands of nodes actually needs. Host-sharded
+iteration slices the global batch by (host_index, host_count) so each host
+materializes only its shard (multi-host layout; on one host it is the
+identity).
+
+Synthetic token streams follow a Zipfian unigram distribution with a
+deterministic "document" structure (periodic BOS), enough to give the LM a
+learnable signal for the convergence examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_alpha: float = 1.1
+    bos_period: int = 64
+
+
+def _zipf_logits(cfg: DataConfig) -> jax.Array:
+    ranks = jnp.arange(1, cfg.vocab_size + 1, dtype=jnp.float32)
+    return -cfg.zipf_alpha * jnp.log(ranks)
+
+
+def batch_at_step(cfg: DataConfig, step: int, host_index: int = 0, host_count: int = 1):
+    """(tokens, labels) for this host's slice of global batch at `step`."""
+    assert cfg.global_batch % host_count == 0
+    local = cfg.global_batch // host_count
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    key = jax.random.fold_in(key, host_index)
+    toks = jax.random.categorical(
+        key, _zipf_logits(cfg), shape=(local, cfg.seq_len + 1)
+    ).astype(jnp.int32)
+    # deterministic structure: token t depends on t-1 mod small table so the
+    # model has something to learn beyond unigram frequencies
+    mix = jnp.roll(toks, 1, axis=1) * 31 % cfg.vocab_size
+    use_mix = (jnp.arange(cfg.seq_len + 1) % 3) == 0
+    toks = jnp.where(use_mix[None, :], mix, toks)
+    toks = toks.at[:, :: cfg.bos_period].set(1)  # BOS
+    return toks[:, :-1], toks[:, 1:]
+
+
+class DataIterator:
+    """Stateless-resumable iterator over batch_at_step."""
+
+    def __init__(self, cfg: DataConfig, start_step: int = 0, host_index: int = 0, host_count: int = 1):
+        self.cfg = cfg
+        self.step = start_step
+        self.host_index = host_index
+        self.host_count = host_count
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        b = batch_at_step(self.cfg, self.step, self.host_index, self.host_count)
+        self.step += 1
+        return b

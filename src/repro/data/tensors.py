@@ -1,0 +1,36 @@
+"""Synthetic tensors for the CP-ALS / MTTKRP experiments: exact low-rank
+dense tensors (known ground truth) and sparse COO tensors with configurable
+density — the tensor-decomposition analogue of the LM token pipeline."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cp_als import reconstruct
+
+
+def lowrank_dense(key, shape, rank, noise=0.0):
+    keys = jax.random.split(key, len(shape) + 1)
+    factors = [jax.random.uniform(k, (s, rank)) for k, s in zip(keys, shape)]
+    x = reconstruct(factors)
+    if noise > 0:
+        x = x + noise * jax.random.normal(keys[-1], x.shape)
+    return x, factors
+
+
+def sparse_coo(key, shape, nnz, rank=4):
+    """COO tensor whose values come from a rank-`rank` model (so CP-ALS can
+    recover structure), with uniformly sampled coordinates."""
+    k1, k2 = jax.random.split(key)
+    idx = jnp.stack(
+        [jax.random.randint(jax.random.fold_in(k1, d), (nnz,), 0, s) for d, s in enumerate(shape)],
+        axis=1,
+    ).astype(jnp.int32)
+    factors = [
+        jax.random.uniform(jax.random.fold_in(k2, d), (s, rank)) for d, s in enumerate(shape)
+    ]
+    vals = jnp.ones((nnz,))
+    for d in range(len(shape)):
+        rows = factors[d][idx[:, d]]
+        vals = vals * jnp.sum(rows, axis=1) / rank
+    return idx, vals, tuple(shape)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  psram_matmul     — the array's bit-plane int8 MAC + fused ADC epilogue
+  mttkrp           — fused MTTKRP, Khatri-Rao tiles formed in VMEM
+  flash_attention  — online-softmax attention for the 32k prefill shapes
+
+All validated on CPU via interpret=True against ref.py oracles.
+"""
+from .flash_attention import flash_attention
+from .mttkrp import mttkrp_fused
+from .ops import flash_attention_op, mttkrp_op, psram_matmul_op
+from .psram_matmul import psram_matmul

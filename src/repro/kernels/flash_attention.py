@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: flash attention (online softmax), GQA + causal + softcap.
+
+This is the performance-critical attention path for the prefill_32k shapes:
+O(S^2) logits never touch HBM — per (batch*head, q-block) the kernel walks KV
+blocks keeping running max/denominator/accumulator in VMEM scratch.
+
+Grid: (B*H, Sq/bq, Skv/bkv), kv innermost. Causal masking is applied in-block
+(blocks strictly above the diagonal are skipped via pl.when on TPU's
+sequential grid). The pure-jnp oracle is ref.attention_ref; the pure-JAX
+scan equivalent used by the dry-run models is models/layers.chunked_attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, out_ref,
+    m_ref, l_ref, acc_ref,
+    *, nkv: int, bq: int, bkv: int, scale: float, causal: bool, softcap: float,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = (not causal) or (ki * bkv <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)            # (bq, d)
+        k = k_ref[0].astype(jnp.float32)            # (bkv, d)
+        v = v_ref[0].astype(jnp.float32)            # (bkv, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                    # (bq, bkv)
+        if softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        if causal:
+            rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            cols = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]                          # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                       # (bq, bkv)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == nkv - 1)
+    def _done():
+        out_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "softcap", "scale", "bq", "bkv", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,   # (B, H, Sq, D)
+    k: jax.Array,   # (B, Hkv, Skv, D)
+    v: jax.Array,   # (B, Hkv, Skv, D)
+    causal: bool = True,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    bq: int = 128,
+    bkv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    assert h % hkv == 0
+    rep = h // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    bq, bkv = min(bq, sq), min(bkv, skv)
+    assert sq % bq == 0 and skv % bkv == 0
+    nq, nkv = sq // bq, skv // bkv
+
+    qf = q.reshape(b * h, sq, d)
+    # GQA: map flat head index -> kv head index inside the BlockSpec index map
+    kf = k.reshape(b * hkv, skv, d)
+    vf = v.reshape(b * hkv, skv, d)
+
+    def kv_index(bh, qi, ki):
+        # bh walks b*h; the matching kv row is (bh // h) * hkv + (bh % h) // rep
+        return ((bh // h) * hkv + (bh % h) // rep, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, nkv=nkv, bq=bq, bkv=bkv, scale=scale,
+            causal=causal, softcap=softcap,
+        ),
+        grid=(b * h, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bkv, d), kv_index),
+            pl.BlockSpec((1, bkv, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, d)

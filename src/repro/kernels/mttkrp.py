@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: fused dense MTTKRP with Khatri-Rao formed on the fly.
+
+TPU adaptation of §IV: the paper's CP1->CP2->CP3 chain is a scalar/vector
+schedule tailored to an analog crossbar. On TPU the same computation is a
+matmul against the Khatri-Rao product,
+
+    A = X_(0) @ (B ⊙ C),    (B ⊙ C)[j*K + k, r] = B[j, r] * C[k, r]
+
+but materializing (B ⊙ C) in HBM costs J*K*R bytes — more than the tensor
+itself when R > 1. The kernel instead forms each (bk x R) KR tile *in VMEM*
+from a (1, R) row of B and a (bk, R) tile of C (CP 1, on the VPU), feeds the
+MXU with X tiles (CP 2's scaling is the matmul itself), and accumulates into
+the output across the grid (CP 3). HBM traffic: X once + tiny factor reads.
+
+Grid: (I/bi, J, K/bk) — j and k innermost walk the KR rows in row-major
+order, matching the mode-0 unfolding layout, so X_(0) is read contiguously.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, b_ref, c_ref, out_ref, acc_ref, *, nj: int, nk: int):
+    j = pl.program_id(1)
+    kk = pl.program_id(2)
+
+    @pl.when((j == 0) & (kk == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # CP 1 in VMEM: one row of B broadcast against a tile of C
+    kr = b_ref[...] * c_ref[...]          # (bk, R) on the VPU
+    x = x_ref[...]                        # (bi, bk) slice of X_(0) at (i, j*K+k)
+    # CP 2 + CP 3 on the MXU: scale-by-tensor-element and accumulate
+    acc_ref[...] += jax.lax.dot_general(
+        x.astype(jnp.float32), kr.astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when((j == nj - 1) & (kk == nk - 1))
+    def _done():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "bk", "interpret"))
+def mttkrp_fused(
+    x0: jax.Array,   # (I, J*K) mode-0 unfolding, row-major over (j, k)
+    b: jax.Array,    # (J, R)
+    c: jax.Array,    # (K, R)
+    bi: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    i, jk = x0.shape
+    j, r = b.shape
+    k = c.shape[0]
+    assert jk == j * k and c.shape[1] == r
+    bi, bk = min(bi, i), min(bk, k)
+    assert i % bi == 0 and k % bk == 0
+    nj, nk = j, k // bk
+    grid = (i // bi, nj, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, nj=nj, nk=nk),
+        grid=grid,
+        in_specs=[
+            # X_(0) tile at row-block ii, columns [j*K + kk*bk : ... + bk].
+            # Block shape (bi, bk) with index (ii, j*nk + kk) walks row-major.
+            pl.BlockSpec((bi, bk), lambda ii, j_, kk: (ii, j_ * nk + kk)),
+            pl.BlockSpec((1, r), lambda ii, j_, kk: (j_, 0)),
+            pl.BlockSpec((bk, r), lambda ii, j_, kk: (kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((bi, r), lambda ii, j_, kk: (ii, 0)),
+        out_shape=jax.ShapeDtypeStruct((i, r), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bi, r), jnp.float32)],
+        interpret=interpret,
+    )(x0, b, c)

@@ -1,0 +1,60 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each op auto-selects: real Pallas lowering on TPU backends, interpret mode on
+CPU (bit-identical kernel body, Python-executed — used for validation), with
+the pure-jnp oracle from ref.py always available via backend="ref".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import quantize_symmetric
+from . import ref
+from .flash_attention import flash_attention
+from .mttkrp import mttkrp_fused
+from .psram_matmul import psram_matmul
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def psram_matmul_op(
+    x: jax.Array, w: jax.Array, adc_bits: int = 16, backend: str = "auto"
+) -> jax.Array:
+    """Float-in/float-out pSRAM matmul: quantize, run the array kernel, dequant."""
+    qx, sx = quantize_symmetric(x, axis=-1)
+    qw, sw = quantize_symmetric(w, axis=0)
+    sx = sx.reshape(x.shape[0], 1)
+    sw = sw.reshape(1, w.shape[1])
+    if backend == "ref":
+        return ref.psram_matmul_ref(qx, qw, sx, sw, adc_bits=adc_bits)
+    interpret = backend == "interpret" or (backend == "auto" and not _on_tpu())
+    return psram_matmul(qx, qw, sx, sw, adc_bits=adc_bits, interpret=interpret)
+
+
+def mttkrp_op(
+    x: jax.Array, b: jax.Array, c: jax.Array, backend: str = "auto",
+    bi: int = 128, bk: int = 128,
+) -> jax.Array:
+    """Dense mode-0 MTTKRP; x is the 3-mode tensor (I, J, K)."""
+    i, j, k = x.shape
+    x0 = x.reshape(i, j * k)
+    if backend == "ref":
+        return ref.mttkrp_ref(x0, b, c)
+    interpret = backend == "interpret" or (backend == "auto" and not _on_tpu())
+    return mttkrp_fused(x0, b, c, bi=bi, bk=bk, interpret=interpret)
+
+
+def flash_attention_op(
+    q, k, v, causal=True, softcap=0.0, scale=None, backend: str = "auto",
+    bq: int = 128, bkv: int = 128,
+) -> jax.Array:
+    if backend == "ref":
+        return ref.attention_ref(q, k, v, causal=causal, softcap=softcap, scale=scale)
+    interpret = backend == "interpret" or (backend == "auto" and not _on_tpu())
+    return flash_attention(
+        q, k, v, causal=causal, softcap=softcap, scale=scale,
+        bq=bq, bkv=bkv, interpret=interpret,
+    )

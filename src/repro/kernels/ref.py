@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the mathematical definition, written with no regard for
+performance; kernels are asserted allclose against these across shape/dtype
+sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import ADCConfig, QMAX, adc_requantize
+
+
+def psram_matmul_ref(
+    qx: jax.Array,        # (M, K) int8 — intensity-encoded inputs
+    qw: jax.Array,        # (K, N) int8 — programmed array words
+    sx: jax.Array,        # (M, 1) float32 per-row input scale
+    sw: jax.Array,        # (1, N) float32 per-column weight scale
+    adc_bits: int = 16,
+) -> jax.Array:
+    """ADC(int8 @ int8) * scales — the pSRAM array transfer function."""
+    acc = jnp.matmul(
+        qx.astype(jnp.int32), qw.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+    full_scale = float(QMAX) * float(QMAX) * qx.shape[-1]
+    acc = adc_requantize(acc, ADCConfig(bits=adc_bits), full_scale)
+    return acc * (sx * sw)
+
+
+def mttkrp_ref(x0: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
+    """Dense mode-0 MTTKRP from the unfolding: A = X_(0) @ (B ⊙row-major C).
+
+    x0: (I, J*K) row-major over (j, k); b: (J, R); c: (K, R) -> (I, R).
+    """
+    j, r = b.shape
+    k = c.shape[0]
+    kr = (b[:, None, :] * c[None, :, :]).reshape(j * k, r)
+    return x0 @ kr
+
+
+def attention_ref(
+    q: jax.Array,         # (B, H, S, D)
+    k: jax.Array,         # (B, Hkv, S, D)
+    v: jax.Array,         # (B, Hkv, S, D)
+    causal: bool = True,
+    softcap: float = 0.0,
+    scale: float | None = None,
+) -> jax.Array:
+    """Vanilla softmax attention with GQA broadcast, fp32 softmax."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    rep = h // hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    scale = (d ** -0.5) if scale is None else scale
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

@@ -1,0 +1,274 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the very first lines — jax locks the device count on first init:
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import (
+    estimate_fsdp,
+    logical_to_spec,
+    tree_shardings,
+    use_sharding,
+)
+from repro.launch.mesh import chips, make_production_mesh
+from repro.launch.roofline import analyze_hlo, model_flops
+from repro.launch.shapes import ENC_DEC_FRAC, SHAPES, applicable, token_logical_axes, token_specs
+from repro.models.layers import shapes_of, specs_of
+from repro.models.registry import ARCH_IDS, get_config, get_module
+from repro.optim import AdamWConfig
+from repro.serve.engine import make_prefill, make_serve_step
+from repro.train.step import make_train_step
+
+
+def _shape_structs(defs_tree, dtype):
+    return shapes_of(defs_tree, dtype)
+
+
+def build_cell(arch: str, shape_name: str, *, overrides=None, exec_overrides=None):
+    """Returns (fn, args_structs, in_shardings_builder, donate, meta)."""
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch, **(overrides or {}))
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        return None, why
+    ex = {
+        "attention_impl": "chunked",
+        "remat": shape.kind == "train",
+        **(exec_overrides or {}),
+    }
+    cfg = dataclasses.replace(cfg, **ex)
+    return (cfg, shape), ""
+
+
+def lower_cell(cfg, shape, mesh, *, microbatches=8, fsdp="auto", rules=None,
+               opt_cfg=None, verbose=True):
+    mod = get_module(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    training = shape.kind == "train"
+    if fsdp == "auto":
+        use_fsdp = estimate_fsdp(cfg.param_count(), mesh, training)
+    else:
+        use_fsdp = fsdp in (True, "on", "true")
+
+    pdefs = mod.param_defs(cfg)
+    p_structs = _shape_structs(pdefs, dtype)
+    p_specs = specs_of(pdefs)
+    p_shard = tree_shardings(p_structs, p_specs, mesh, fsdp=use_fsdp, rules=rules)
+
+    def data_shardings(spec_axes, structs):
+        return jax.tree.map(
+            lambda s, ax: jax.sharding.NamedSharding(
+                mesh, logical_to_spec(tuple(ax), s.shape, mesh, use_fsdp, rules)
+            ),
+            structs, spec_axes,
+            is_leaf=lambda x: isinstance(x, (tuple, list)),
+        )
+
+    batch_structs = token_specs(cfg, shape)
+    batch_shard = data_shardings(token_logical_axes(cfg, shape), batch_structs)
+
+    with use_sharding(mesh, fsdp=use_fsdp, rules=rules):
+        if shape.kind == "train":
+            from repro.optim import state_spec_tree, state_structs
+            ocfg = opt_cfg or AdamWConfig()
+            opt_structs = state_structs(p_structs, ocfg)
+            opt_spec_tree = state_spec_tree(p_specs, p_structs, ocfg)
+            opt_shard = tree_shardings(opt_structs, opt_spec_tree, mesh,
+                                       fsdp=use_fsdp, rules=rules)
+            step = make_train_step(cfg, ocfg, microbatches=microbatches)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, opt_shard, batch_shard),
+                donate_argnums=(0, 1),
+            )
+            args = (p_structs, opt_structs, batch_structs)
+        elif shape.kind == "prefill":
+            dec = max(16, int(shape.seq_len * ENC_DEC_FRAC))
+            cache_len = dec if cfg.family == "encdec" else shape.seq_len
+            fn = make_prefill(cfg, cache_len=cache_len)
+            if cfg.family == "encdec":
+                jitted = jax.jit(fn, in_shardings=(p_shard, batch_shard["frames"], batch_shard["tokens"]))
+                args = (p_structs, batch_structs["frames"], batch_structs["tokens"])
+            else:
+                jitted = jax.jit(fn, in_shardings=(p_shard, batch_shard["tokens"]))
+                args = (p_structs, batch_structs["tokens"])
+        else:  # decode
+            if cfg.family == "encdec":
+                dec_len = max(16, int(shape.seq_len * ENC_DEC_FRAC))
+                cdefs = mod.cache_defs(cfg, shape.global_batch, dec_len, shape.seq_len)
+            else:
+                cdefs = mod.cache_defs(cfg, shape.global_batch, shape.seq_len)
+            c_structs = _shape_structs(cdefs, dtype)
+            # SSM decode state is f32 by construction
+            def fix_dtype(s, ax):
+                return s
+            c_specs = specs_of(cdefs)
+            c_shard = tree_shardings(c_structs, c_specs, mesh, fsdp=False, rules=rules)
+            step = make_serve_step(cfg)
+            scalar_shard = jax.sharding.NamedSharding(mesh, logical_to_spec((), (), mesh))
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, c_shard, batch_shard["token"], scalar_shard),
+                donate_argnums=(1,),
+            )
+            args = (p_structs, c_structs, batch_structs["token"],
+                    jax.ShapeDtypeStruct((), jnp.int32))
+
+        t0 = time.time()
+        lowered = jitted.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    roof = analyze_hlo(compiled.as_text())
+    n_chips = chips(mesh)
+    mf_global = model_flops(cfg, shape.kind, shape.seq_len, shape.global_batch)
+    mf_per_chip = mf_global / n_chips
+    result = {
+        "arch": cfg.name,
+        "shape": shape.name,
+        "kind": shape.kind,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "chips": n_chips,
+        "fsdp": bool(use_fsdp),
+        "microbatches": microbatches if shape.kind == "train" else None,
+        "params_b": cfg.param_count() / 1e9,
+        "active_params_b": cfg.active_param_count() / 1e9,
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "per_device_total_gb": round(
+                (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                 + mem.output_size_in_bytes - mem.alias_size_in_bytes) / 1e9, 3),
+        },
+        "cost_analysis_raw": {
+            "flops": ca.get("flops"),
+            "bytes": ca.get("bytes accessed"),
+        },
+        "roofline": roof.summary(),
+        "model_flops_global": mf_global,
+        "model_flops_per_chip": mf_per_chip,
+        "useful_flops_ratio": (mf_per_chip / roof.dot_flops) if roof.dot_flops else None,
+    }
+    from repro.launch.roofline import ideal_seconds
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ideal = ideal_seconds(cfg, shape.kind, shape.seq_len, shape.global_batch,
+                          n_chips, sizes.get("model", 16))
+    worst = max(roof.compute_s, roof.memory_s, roof.collective_s)
+    result["ideal_s"] = ideal
+    result["roofline_fraction"] = (ideal / worst) if worst > 0 else None
+    return result, compiled, lowered
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--fsdp", default="auto")
+    ap.add_argument("--attn-impl", default="chunked")
+    ap.add_argument("--attn-chunk", type=int, default=512)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--opt-mem", action="store_true",
+                    help="memory-reduced optimizer: bf16 m + factored v")
+    ap.add_argument("--full-remat", action="store_true",
+                    help="nothing_saveable remat policy (min activation memory)")
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="shard activation sequence dim on the model axis "
+                         "when heads/ff could not use it (sequence parallelism)")
+    ap.add_argument("--scan-layers", default="true")
+    ap.add_argument("--psram-projections", action="store_true")
+    ap.add_argument("--psram-int8", action="store_true",
+                    help="stored-int8 projection weights (photonic offload)")
+    ap.add_argument("--vocab-pad", type=int, default=1,
+                    help="pad vocab to a multiple (256 => shardable on model axis)")
+    ap.add_argument("--moe-cf", type=float, default=None,
+                    help="override MoE capacity factor")
+    ap.add_argument("--probs-bf16", action="store_true",
+                    help="bf16 softmax weights (flash numerics)")
+    ap.add_argument("--outdir", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shape_names = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(args.outdir, exist_ok=True)
+
+    rows = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        for arch in archs:
+            for sname in shape_names:
+                ex = {
+                    "attention_impl": args.attn_impl,
+                    "attn_chunk": args.attn_chunk,
+                    "scan_layers": args.scan_layers == "true",
+                    "psram_projections": args.psram_projections or args.psram_int8,
+                    "psram_stored_int8": args.psram_int8,
+                    "vocab_pad_multiple": args.vocab_pad,
+                }
+                if args.moe_cf is not None:
+                    ex["moe_capacity_factor"] = args.moe_cf
+                if args.probs_bf16:
+                    ex["attn_probs_bf16"] = True
+                built, why = build_cell(arch, sname, exec_overrides=ex)
+                if built is None:
+                    print(f"SKIP  {arch:24s} {sname:12s} {'multi' if multi else 'single'}: {why}")
+                    rows.append({"arch": arch, "shape": sname, "skipped": why,
+                                 "mesh": "multi" if multi else "single"})
+                    continue
+                cfg, shape = built
+                if args.no_remat:
+                    cfg = dataclasses.replace(cfg, remat=False)
+                if args.full_remat:
+                    cfg = dataclasses.replace(cfg, remat_policy="nothing")
+                rules = {"seq": (("model",), ())} if args.seq_shard else None
+                from repro.optim import AdamWConfig as _AC
+                ocfg = _AC(m_dtype="bfloat16", factored_v=True) if args.opt_mem else None
+                try:
+                    res, _, _ = lower_cell(
+                        cfg, shape, mesh, rules=rules, opt_cfg=ocfg,
+                        microbatches=args.microbatches, fsdp=args.fsdp,
+                    )
+                except Exception as e:  # a failing cell is a bug — surface it
+                    print(f"FAIL  {arch:24s} {sname:12s}: {type(e).__name__}: {e}")
+                    raise
+                r = res["roofline"]
+                print(
+                    f"OK    {arch:24s} {sname:12s} {res['mesh']:9s} "
+                    f"mem {res['memory']['per_device_total_gb']:7.2f}GB  "
+                    f"compute {r['compute_s']*1e3:9.3f}ms memory {r['memory_s']*1e3:9.3f}ms "
+                    f"coll {r['collective_s']*1e3:9.3f}ms -> {r['dominant']:10s} "
+                    f"roofline_frac {res['roofline_fraction'] and round(res['roofline_fraction'],3)}"
+                )
+                rows.append(res)
+                tag = f"{arch}_{sname}_{'multi' if multi else 'single'}"
+                with open(os.path.join(args.outdir, tag + ".json"), "w") as f:
+                    json.dump(res, f, indent=1)
+    with open(os.path.join(args.outdir, "summary.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {len(rows)} cells to {args.outdir}")
+
+
+if __name__ == "__main__":
+    main()

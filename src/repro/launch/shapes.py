@@ -1,0 +1,87 @@
+"""Assigned input shapes and per-(arch x shape) applicability + input specs.
+
+Every spec is a ShapeDtypeStruct (weak-type-correct, shardable, zero
+allocation). ``decode_*`` / ``long_*`` describe serve_step (one new token
+against a seq_len KV cache); ``train_4k`` describes train_step;
+``prefill_32k`` describes the prefill function.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic sequence handling: run only for SSM / hybrid
+# archs (see DESIGN.md §shape-applicability for the full reasoning).
+LONG_OK_FAMILIES = ("ssm", "hybrid")
+ENC_DEC_FRAC = 0.25  # decoder length = seq/4 for enc-dec (ASR-ish ratio)
+
+
+def applicable(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.family not in LONG_OK_FAMILIES:
+        return False, "full-attention arch at 500k context (per assignment rule)"
+    return True, ""
+
+
+def token_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStructs for the data batch of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if cfg.family == "encdec":
+        dec = max(16, int(s * ENC_DEC_FRAC))
+        frames = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+        if shape.kind == "train":
+            return {
+                "frames": frames,
+                "tokens": jax.ShapeDtypeStruct((b, dec), i32),
+                "labels": jax.ShapeDtypeStruct((b, dec), i32),
+            }
+        if shape.kind == "prefill":
+            return {"frames": frames, "tokens": jax.ShapeDtypeStruct((b, dec), i32)}
+        return {"token": jax.ShapeDtypeStruct((b,), i32)}
+    if shape.kind == "train":
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+    if shape.kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    return {"token": jax.ShapeDtypeStruct((b,), i32)}
+
+
+def token_logical_axes(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Logical axes matching token_specs, for in_shardings."""
+    if cfg.family == "encdec":
+        if shape.kind == "train":
+            return {
+                "frames": ("batch", "seq", None),
+                "tokens": ("batch", "seq"),
+                "labels": ("batch", "seq"),
+            }
+        if shape.kind == "prefill":
+            return {"frames": ("batch", "seq", None), "tokens": ("batch", "seq")}
+        return {"token": ("batch",)}
+    if shape.kind == "train":
+        return {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    if shape.kind == "prefill":
+        return {"tokens": ("batch", "seq")}
+    return {"token": ("batch",)}

@@ -1,0 +1,186 @@
+"""Decoder blocks: the repeating group pattern for every family.
+
+A *group* is the repeating unit scanned over (one layer for plain archs, the
+(local, global) pair for gemma2, the 1-attn+7-mamba octet for jamba). Each
+layer in a group is described by a layout descriptor and owns norms + mixer
+(attention or SSD) + optional MLP/MoE.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import (
+    attention_cache_defs,
+    attention_decode,
+    attention_fwd,
+    mlp_defs,
+    mlp_fwd,
+    rmsnorm,
+    rmsnorm_defs,
+)
+from .moe import moe_defs, moe_fwd
+from .ssm import ssm_cache_defs, ssm_decode, ssm_defs, ssm_fwd
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerDesc:
+    mixer: str          # "attn" | "ssm"
+    local: bool = False
+    mlp: str | None = "dense"  # "dense" | "moe" | None
+
+
+def group_layout(cfg: ArchConfig) -> list[LayerDesc]:
+    if cfg.family == "ssm":
+        return [LayerDesc(mixer="ssm", mlp=None)]
+    if cfg.family == "hybrid" and cfg.hybrid_attn_period:
+        period = cfg.hybrid_attn_period
+        out = []
+        for i in range(period):
+            mixer = "attn" if i == period // 2 else "ssm"
+            mlp = "moe" if (cfg.num_experts and i % cfg.moe_every == cfg.moe_every - 1) else "dense"
+            out.append(LayerDesc(mixer=mixer, mlp=mlp))
+        return out
+    if cfg.alt_local_global:
+        return [LayerDesc(mixer="attn", local=True), LayerDesc(mixer="attn", local=False)]
+    mlp = "moe" if cfg.num_experts else "dense"
+    return [LayerDesc(mixer="attn", mlp=mlp)]
+
+
+def _mixer_defs(cfg, desc):
+    from .layers import attention_defs
+    return attention_defs(cfg) if desc.mixer == "attn" else ssm_defs(cfg)
+
+
+def group_defs(cfg: ArchConfig):
+    out = {}
+    for i, desc in enumerate(group_layout(cfg)):
+        layer = {
+            "pre_norm": rmsnorm_defs(cfg.d_model),
+            "mixer": _mixer_defs(cfg, desc),
+        }
+        if desc.mlp is not None:
+            layer["mlp_norm"] = rmsnorm_defs(cfg.d_model)
+            layer["mlp"] = moe_defs(cfg) if desc.mlp == "moe" else mlp_defs(cfg)
+        if cfg.post_block_norms:
+            layer["post_norm"] = rmsnorm_defs(cfg.d_model)
+            if desc.mlp is not None:
+                layer["post_mlp_norm"] = rmsnorm_defs(cfg.d_model)
+        out[f"layer{i}"] = layer
+    return out
+
+
+def group_cache_defs(cfg: ArchConfig, batch: int, seq: int):
+    out = {}
+    for i, desc in enumerate(group_layout(cfg)):
+        if desc.mixer == "attn":
+            out[f"layer{i}"] = attention_cache_defs(cfg, batch, seq)
+        else:
+            out[f"layer{i}"] = ssm_cache_defs(cfg, batch)
+    return out
+
+
+def _residual(cfg, p, x, branch, post_key):
+    if cfg.post_block_norms and post_key in p:
+        branch = rmsnorm(p[post_key], branch, cfg.norm_eps)
+    return x + branch
+
+
+def group_fwd(p_group, x, cfg: ArchConfig, pos, collect_cache: bool = False):
+    """Full-sequence forward through one group. Returns (x, cache|None)."""
+    caches = {}
+    for i, desc in enumerate(group_layout(cfg)):
+        p = p_group[f"layer{i}"]
+        h = rmsnorm(p["pre_norm"], x, cfg.norm_eps)
+        if desc.mixer == "attn":
+            y, (k, v) = attention_fwd(p["mixer"], h, cfg, pos, layer_local=desc.local)
+            if collect_cache:
+                caches[f"layer{i}"] = {"k": k, "v": v}
+        else:
+            y, ssm_cache = ssm_fwd(p["mixer"], h, cfg)
+            if collect_cache:
+                caches[f"layer{i}"] = ssm_cache
+        x = _residual(cfg, p, x, y, "post_norm")
+        if desc.mlp is not None:
+            h = rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+            y = moe_fwd(p["mlp"], h, cfg) if desc.mlp == "moe" else mlp_fwd(p["mlp"], h, cfg)
+            x = _residual(cfg, p, x, y, "post_mlp_norm")
+    return x, (caches if collect_cache else None)
+
+
+def group_decode(p_group, x, cfg: ArchConfig, cache_group, cache_pos):
+    """One-token decode through one group. Returns (x, new_cache_group)."""
+    new_caches = {}
+    for i, desc in enumerate(group_layout(cfg)):
+        p = p_group[f"layer{i}"]
+        cache = cache_group[f"layer{i}"]
+        h = rmsnorm(p["pre_norm"], x, cfg.norm_eps)
+        if desc.mixer == "attn":
+            y, nc = attention_decode(p["mixer"], h, cfg, cache, cache_pos, layer_local=desc.local)
+        else:
+            y, nc = ssm_decode(p["mixer"], h, cfg, cache)
+        new_caches[f"layer{i}"] = nc
+        x = _residual(cfg, p, x, y, "post_norm")
+        if desc.mlp is not None:
+            h = rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+            y = moe_fwd(p["mlp"], h, cfg) if desc.mlp == "moe" else mlp_fwd(p["mlp"], h, cfg)
+            x = _residual(cfg, p, x, y, "post_mlp_norm")
+    return x, new_caches
+
+
+def group_decode_tokens(p_group, x, cfg: ArchConfig, cache_group, cache_pos):
+    """One-token decode that treats the cache as READ-ONLY and emits only the
+    per-layer deltas: the new token's (kn, vn) for attention layers, the new
+    (state, conv) for SSM layers. The caller writes all layers' deltas with a
+    single static-index dynamic-update-slice after the scan, so the full
+    per-layer KV is never copied (the xs→ys form copies it every step)."""
+    from .layers import _new_kv, attention_decode_append
+    deltas = {}
+    for i, desc in enumerate(group_layout(cfg)):
+        p = p_group[f"layer{i}"]
+        cache = cache_group[f"layer{i}"]
+        h = rmsnorm(p["pre_norm"], x, cfg.norm_eps)
+        if desc.mixer == "attn":
+            kn, vn, q = _new_kv(p["mixer"], h, cfg, cache_pos)
+            y = attention_decode_append(
+                p["mixer"], h, cfg, cache["k"], cache["v"], cache_pos,
+                layer_local=desc.local, precomputed=(kn, vn, q),
+            )
+            deltas[f"layer{i}"] = {
+                "k": kn.astype(cache["k"].dtype),
+                "v": vn.astype(cache["v"].dtype),
+            }
+        else:
+            y, nc = ssm_decode(p["mixer"], h, cfg, cache)
+            deltas[f"layer{i}"] = jax.tree.map(
+                lambda new, old: new.astype(old.dtype), nc, cache)
+        x = _residual(cfg, p, x, y, "post_norm")
+        if desc.mlp is not None:
+            h = rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+            y = moe_fwd(p["mlp"], h, cfg) if desc.mlp == "moe" else mlp_fwd(p["mlp"], h, cfg)
+            x = _residual(cfg, p, x, y, "post_mlp_norm")
+    return x, deltas
+
+
+def apply_decode_deltas(cache, deltas, cfg: ArchConfig, cache_pos):
+    """Write the scan-stacked per-layer deltas back into the donated cache.
+
+    Attention K/V: one dynamic-update-slice per leaf at (0, 0, cache_pos,..)
+    — G is a static index, only the sequence position is dynamic.
+    SSM state/conv: full replacement (states are step-sized anyway)."""
+    new_cache = {}
+    for i, desc in enumerate(group_layout(cfg)):
+        key = f"layer{i}"
+        if desc.mixer == "attn":
+            new_cache[key] = {
+                name: jax.lax.dynamic_update_slice(
+                    cache[key][name], deltas[key][name], (0, 0, cache_pos, 0, 0)
+                )
+                for name in ("k", "v")
+            }
+        else:
+            new_cache[key] = deltas[key]
+    return new_cache

@@ -1,0 +1,234 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+Per the assignment, the audio frontend is a STUB: the encoder consumes
+precomputed frame embeddings (B, S, d_model) from input_specs(). The decoder
+is a standard causal transformer with cross-attention into the encoder
+output; serve-side, the cross KV is computed once at prefill and the decoder
+self-attention keeps a growing KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import hint
+from .config import ArchConfig
+from .layers import (
+    _proj,
+    _sdpa,
+    apply_rope,
+    attention_cache_defs,
+    attention_decode,
+    attention_defs,
+    attention_fwd,
+    ddef,
+    init_params,
+    mlp_defs,
+    mlp_fwd,
+    rmsnorm,
+    rmsnorm_defs,
+    specs_of,
+    stack_defs,
+)
+
+
+def _enc_layer_defs(cfg):
+    return {
+        "pre_norm": rmsnorm_defs(cfg.d_model),
+        "attn": attention_defs(cfg),
+        "mlp_norm": rmsnorm_defs(cfg.d_model),
+        "mlp": mlp_defs(cfg),
+    }
+
+
+def _dec_layer_defs(cfg):
+    return {
+        "pre_norm": rmsnorm_defs(cfg.d_model),
+        "self_attn": attention_defs(cfg),
+        "cross_norm": rmsnorm_defs(cfg.d_model),
+        "cross_attn": attention_defs(cfg),
+        "mlp_norm": rmsnorm_defs(cfg.d_model),
+        "mlp": mlp_defs(cfg),
+    }
+
+
+def param_defs(cfg: ArchConfig):
+    return {
+        "frame_proj": ddef((cfg.d_model, cfg.d_model), ("embed", "embed")),
+        "embed": ddef((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), scale=1.0),
+        "encoder": stack_defs(_enc_layer_defs(cfg), cfg.enc_layers),
+        "enc_norm": rmsnorm_defs(cfg.d_model),
+        "decoder": stack_defs(_dec_layer_defs(cfg), cfg.dec_layers),
+        "final_norm": rmsnorm_defs(cfg.d_model),
+        "head": ddef((cfg.d_model, cfg.padded_vocab), ("embed", "vocab")),
+    }
+
+
+def init(key, cfg: ArchConfig):
+    return init_params(key, param_defs(cfg), dtype=jnp.dtype(cfg.dtype))
+
+
+def param_specs(cfg: ArchConfig):
+    return specs_of(param_defs(cfg))
+
+
+def _cross_attention(p, x, kv, cfg: ArchConfig):
+    """Non-causal, non-rotary attention of decoder states into encoder KV."""
+    b, s, d = x.shape
+    q = _proj(x, p["wq"], cfg).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k, v = kv
+    bias = jnp.zeros((1, k.shape[1]))
+    out = _sdpa(q, k, v, bias, cfg)
+    return _proj(out.reshape(b, s, cfg.q_dim), p["wo"], cfg)
+
+
+def _cross_kv(p, enc_out, cfg: ArchConfig):
+    b, s, _ = enc_out.shape
+    k = _proj(enc_out, p["wk"], cfg).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = _proj(enc_out, p["wv"], cfg).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def encode(params, frames, cfg: ArchConfig):
+    """frames: (B, S, d_model) stub embeddings -> encoder states."""
+    b, s, _ = frames.shape
+    x = hint(frames @ params["frame_proj"].astype(frames.dtype), ("batch", "seq", None))
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(h, p):
+        a, _ = attention_fwd(
+            p["attn"], rmsnorm(p["pre_norm"], h, cfg.norm_eps), cfg, pos, causal=False
+        )
+        h = h + a
+        m = mlp_fwd(p["mlp"], rmsnorm(p["mlp_norm"], h, cfg.norm_eps), cfg)
+        return h + m, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _decoder_fwd(params, tokens, enc_out, cfg: ArchConfig, collect_cache=False):
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(h, p):
+        a, kv_self = attention_fwd(
+            p["self_attn"], rmsnorm(p["pre_norm"], h, cfg.norm_eps), cfg, pos
+        )
+        h = h + a
+        kv_cross = _cross_kv(p["cross_attn"], enc_out, cfg)
+        c = _cross_attention(
+            p["cross_attn"], rmsnorm(p["cross_norm"], h, cfg.norm_eps), kv_cross, cfg
+        )
+        h = h + c
+        m = mlp_fwd(p["mlp"], rmsnorm(p["mlp_norm"], h, cfg.norm_eps), cfg)
+        caches = None
+        if collect_cache:
+            caches = {
+                "self": {"k": kv_self[0], "v": kv_self[1]},
+                "cross": {"k": kv_cross[0], "v": kv_cross[1]},
+            }
+        return h + m, caches
+
+    x, caches = jax.lax.scan(body, x, params["decoder"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, caches
+
+
+def _head(params, x, cfg: ArchConfig):
+    logits = (x @ params["head"].astype(x.dtype)).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        iota = jnp.arange(cfg.padded_vocab)
+        logits = jnp.where(iota < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+def forward(params, frames, tokens, cfg: ArchConfig):
+    """Training forward: logits over decoder positions."""
+    enc_out = encode(params, frames, cfg)
+    x, _ = _decoder_fwd(params, tokens, enc_out, cfg)
+    return _head(params, x, cfg)
+
+
+def loss_fn(params, frames, tokens, labels, cfg: ArchConfig):
+    from .transformer import cross_entropy
+    logits = forward(params, frames, tokens, cfg)
+    return cross_entropy(logits, labels)
+
+
+def prefill(params, frames, tokens, cfg: ArchConfig, cache_len: int):
+    """Encode + run the decoder prompt, returning (last logits, cache)."""
+    enc_out = encode(params, frames, cfg)
+    x, caches = _decoder_fwd(params, tokens, enc_out, cfg, collect_cache=True)
+    s = tokens.shape[1]
+
+    def pad_self(a):
+        if a.ndim == 5 and a.shape[2] == s:
+            pad = [(0, 0)] * a.ndim
+            pad[2] = (0, cache_len - s)
+            return jnp.pad(a, pad)
+        return a
+
+    caches["self"] = jax.tree.map(pad_self, caches["self"])
+    logits = _head(params, x[:, -1], cfg)
+    return logits, caches
+
+
+def cache_defs(cfg: ArchConfig, batch: int, dec_len: int, enc_len: int):
+    one = {
+        "self": attention_cache_defs(cfg, batch, dec_len),
+        "cross": attention_cache_defs(cfg, batch, enc_len),
+    }
+    return stack_defs(one, cfg.dec_layers)
+
+
+def init_cache(cfg: ArchConfig, batch: int, dec_len: int, enc_len: int, dtype=None):
+    return init_params(
+        jax.random.PRNGKey(0), cache_defs(cfg, batch, dec_len, enc_len),
+        dtype=dtype or jnp.dtype(cfg.dtype),
+    )
+
+
+def cache_specs(cfg: ArchConfig, batch: int, dec_len: int, enc_len: int):
+    return specs_of(cache_defs(cfg, batch, dec_len, enc_len))
+
+
+def decode_step(params, cache, token, cache_pos, cfg: ArchConfig):
+    """One decoder token against self cache + static cross cache.
+
+    Same delta-decode design as the decoder-only path: the cache enters the
+    scan read-only, only the new token's (kn, vn) come out as ys, and one
+    static-index dynamic-update-slice writes them back — never copying the
+    per-layer self KV (and never touching the cross KV at all)."""
+    from .layers import _new_kv, attention_decode_append
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+
+    def body(h, scanned):
+        p, c = scanned
+        hn = rmsnorm(p["pre_norm"], h, cfg.norm_eps)
+        kn, vn, q = _new_kv(p["self_attn"], hn, cfg, cache_pos)
+        a = attention_decode_append(
+            p["self_attn"], hn, cfg, c["self"]["k"], c["self"]["v"], cache_pos,
+            precomputed=(kn, vn, q),
+        )
+        h = h + a
+        cr, _ = attention_decode(
+            p["cross_attn"], rmsnorm(p["cross_norm"], h, cfg.norm_eps), cfg,
+            c["cross"], cache_pos, cross=True,
+        )
+        h = h + cr
+        m = mlp_fwd(p["mlp"], rmsnorm(p["mlp_norm"], h, cfg.norm_eps), cfg)
+        return h + m, {"k": kn.astype(c["self"]["k"].dtype),
+                       "v": vn.astype(c["self"]["v"].dtype)}
+
+    x, deltas = jax.lax.scan(body, x, (params["decoder"], cache))
+    new_self = {
+        name: jax.lax.dynamic_update_slice(
+            cache["self"][name], deltas[name], (0, 0, cache_pos, 0, 0))
+        for name in ("k", "v")
+    }
+    new_cache = {"self": new_self, "cross": cache["cross"]}
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _head(params, x[:, 0], cfg)
+    return logits, new_cache

@@ -1,0 +1,116 @@
+"""Mixture-of-Experts: token-choice top-k routing, position-priority capacity.
+
+Matches the HF reference semantics (granite-moe / dbrx / jamba are all
+token-choice): each token picks its top_k experts; each expert serves at most
+C = ceil(T·top_k/E · capacity_factor) tokens, and overflow is dropped in
+*position order* (later tokens lose first). Position-priority makes routing
+exactly causal — a token's computation can never depend on later tokens — so
+prefill and decode agree bit-for-bit whenever no drop occurs (and drops only
+ever remove, never change, earlier tokens' compute).
+
+Static shapes throughout: dispatch/combine are scatter/gather into an
+(E, C, d) buffer, so FLOPs are honest (top_k·capacity_factor per token) and
+the expert dimension shards on the "model" mesh axis (expert parallelism).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import hint
+from .config import ArchConfig
+from .layers import ddef, is_quantized, wdef
+
+CAPACITY_FACTOR = 1.25
+
+
+def moe_defs(cfg: ArchConfig):
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.d_ff_expert or cfg.d_ff
+    defs = {
+        "router": ddef((d, e), ("embed", "experts")),
+        "wi": wdef(cfg, (e, d, ff), ("experts", "embed", "ff")),
+        "wo": wdef(cfg, (e, ff, d), ("experts", "ff", "embed")),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        defs["wg"] = wdef(cfg, (e, d, ff), ("experts", "embed", "ff"))
+    return defs
+
+
+def capacity(tokens: int, cfg: ArchConfig, factor: float | None = CAPACITY_FACTOR) -> int:
+    if factor is None:  # dropless: every expert can serve every token
+        return tokens
+    return max(1, min(tokens, math.ceil(tokens * cfg.top_k / cfg.num_experts * factor)))
+
+
+def moe_fwd(p, x, cfg: ArchConfig, capacity_factor: float | None = "cfg"):
+    """x: (B, S, D) -> (B, S, D)."""
+    if capacity_factor == "cfg":
+        capacity_factor = cfg.moe_capacity_factor
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.top_k
+    c = capacity(t, cfg, capacity_factor)
+    # batch-major flattening: the merged (B·S) dim keeps the batch ("data")
+    # sharding representable in GSPMD, so dispatch/combine stay shard-local.
+    # Priority for capacity drops is therefore (batch, position)-ordered:
+    # within a sequence it is position-causal; across batch rows the
+    # tie-break is batch index (GShard-style drops are not causal at all,
+    # so this is strictly tighter). Tests/serving run dropless (C = T),
+    # where order is irrelevant and decode == forward exactly.
+    xt = x.reshape(t, d)
+
+    scores = jax.nn.softmax(
+        (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32), axis=-1
+    )                                                   # (T, E)
+    gates, eidx = jax.lax.top_k(scores, k)              # (T, k)
+
+    # position-priority rank of each assignment within its expert
+    flat_e = eidx.reshape(-1)                           # (T*k,) row-major: token-major
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.float32)
+    rank = (jnp.cumsum(onehot, axis=0) - onehot)        # exclusive count
+    rank = jnp.sum(rank * onehot, axis=-1).astype(jnp.int32)   # (T*k,)
+    keep = rank < c
+
+    # dispatch without an index-gather: broadcast+reshape keeps the token
+    # dim's data-sharding intact (an xt[token_of] gather forces GSPMD to
+    # all-reduce the full (T*k, d) tensor across the data axis)
+    xa = jnp.broadcast_to(xt[:, None, :], (t, k, d)).reshape(t * k, d)
+    # scatter into the expert-sharded (E, C, d) buffer; overflow assignments
+    # drop here (mode="drop"), matching the keep mask below.
+    xe = (
+        jnp.zeros((e, c, d), xt.dtype)
+        .at[flat_e, rank]
+        .add(jnp.where(keep[:, None], xa, 0), mode="drop")
+    )
+    # d-dim carries the FSDP ("embed") axis so the expert einsum contracts
+    # locally against FSDP-sharded expert weights (partial + small AR)
+    # instead of all-gathering every expert's weights over the data axis
+    xe = hint(xe, ("experts", None, "embed"))
+
+    def expert_mm(spec, a, w):
+        if is_quantized(w):
+            from repro.core.photonic_layer import psram_einsum
+            return psram_einsum(spec, a, w, cfg.adc_bits).astype(a.dtype)
+        return jnp.einsum(spec, a, w)
+
+    h = expert_mm("ecd,edf->ecf", xe, p["wi"])
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(expert_mm("ecd,edf->ecf", xe, p["wg"])) * h
+    elif cfg.act == "geglu":
+        h = jax.nn.gelu(expert_mm("ecd,edf->ecf", xe, p["wg"])) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = hint(h, ("experts", None, "ff"))
+    ye = expert_mm("ecf,efd->ecd", h, p["wo"])          # (E, C, D)
+    ye = hint(ye, ("experts", None, "embed"))
+
+    # combine: each assignment reads its expert row, weighted by its gate;
+    # the k-way sum is a local reshape+reduce (no scatter) so only the
+    # expert gather itself crosses the model axis
+    per_assign = ye.at[flat_e, jnp.minimum(rank, c - 1)].get(
+        mode="fill", fill_value=0
+    ) * (gates.reshape(-1, 1).astype(ye.dtype) * keep[:, None])
+    out = per_assign.reshape(t, k, d).sum(axis=1)
+    return hint(out.reshape(b, s, d), ("batch", "seq", None))

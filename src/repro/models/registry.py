@@ -1,0 +1,39 @@
+"""Model registry: family -> module dispatch + arch config lookup."""
+from __future__ import annotations
+
+import importlib
+
+from .config import ArchConfig
+from . import encdec, transformer
+
+ARCH_IDS = [
+    "chatglm3_6b",
+    "gemma2_27b",
+    "granite_8b",
+    "deepseek_7b",
+    "seamless_m4t_large_v2",
+    "jamba_1p5_large",
+    "qwen2_vl_7b",
+    "granite_moe_1b_a400m",
+    "dbrx_132b",
+    "mamba2_370m",
+]
+
+
+def get_config(arch_id: str, **overrides) -> ArchConfig:
+    arch_id = arch_id.replace("-", "_").replace(".", "p")
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    cfg = mod.CONFIG
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def get_module(cfg: ArchConfig):
+    """The model implementation module for a config's family."""
+    return encdec if cfg.family == "encdec" else transformer
+
+
+def list_configs() -> dict[str, ArchConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,195 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked for TPU.
+
+The SSD form computes the selective state-space recurrence
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;   y_t = C_t h_t + D x_t
+
+as chunk-local matmuls (MXU-friendly quadratic-in-chunk "attention" term)
+plus an inter-chunk scan over the compressed state (H, P, N) — the standard
+Mamba-2 algorithm, here in pure JAX (arXiv:2405.21060 listing 1 semantics).
+
+Used both by mamba2-370m and for the Mamba layers of jamba (DESIGN.md notes
+the Mamba-1→SSD substitution). Decode is the O(1) recurrent update with a
+(conv window, state) cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.photonic_layer import maybe_psram_matmul
+from repro.dist.sharding import hint
+from .config import ArchConfig
+from .layers import _proj, ddef, rmsnorm, rmsnorm_defs, wdef
+
+
+def ssm_defs(cfg: ArchConfig):
+    d, di, n, hds = cfg.d_model, cfg.d_inner_resolved, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * n  # x, B, C all pass the causal conv
+    return {
+        # fused input projection: [z (di), xBC (di+2n), dt (heads)]
+        "in_proj": wdef(cfg, (d, 2 * di + 2 * n + hds), ("embed", "dinner")),
+        "conv_w": ddef((cfg.ssm_conv, conv_ch), (None, "dinner"), scale=0.5),
+        "conv_b": ddef((conv_ch,), ("dinner",), init="zeros"),
+        "a_log": ddef((hds,), (None,), init="zeros"),
+        "d_skip": ddef((hds,), (None,), init="ones"),
+        "dt_bias": ddef((hds,), (None,), init="zeros"),
+        "norm": rmsnorm_defs(di),
+        "out_proj": wdef(cfg, (di, d), ("dinner", "embed")),
+    }
+
+
+def _split_in(p, x, cfg: ArchConfig):
+    di, n, hds = cfg.d_inner_resolved, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = _proj(x, p["in_proj"], cfg)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def _conv_full(p, xbc, cfg: ArchConfig):
+    """Causal depthwise conv over the sequence (train/prefill path)."""
+    w = p["conv_w"]  # (K, C)
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def _segsum(x):
+    """exp-friendly segment sums: out[..., i, j] = sum_{j<t<=i} x[..., t]."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b, c, chunk: int):
+    """SSD scan. x:(B,S,H,P) dt:(B,S,H) a:(H,)<0 b,c:(B,S,N) (ngroups=1).
+
+    Returns y:(B,S,H,P), final_state:(B,H,P,N).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    if s % q:  # zero-pad the tail: dt=0 ⇒ decay 1, contribution 0 (inert)
+        pad = q - s % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    s_pad = x.shape[1]
+    nc = s_pad // q
+    xc = x.reshape(bsz, nc, q, h, p)
+    dtc = dt.reshape(bsz, nc, q, h)
+    bc = b.reshape(bsz, nc, q, n)
+    cc = c.reshape(bsz, nc, q, n)
+
+    da = dtc * a  # (B, nc, q, H)
+    da_cum = jnp.cumsum(da, axis=2)
+
+    # 1. intra-chunk (diagonal blocks): quadratic attention-like term
+    l = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))          # (B,nc,H,q,q)
+    cb = jnp.einsum("bcqn,bckn->bcqk", cc, bc)              # (B,nc,q,q)
+    y_diag = jnp.einsum(
+        "bcqk,bchqk,bckh,bckhp->bcqhp",
+        cb, l, dtc, xc,
+    )
+
+    # 2. chunk states: what each chunk contributes to the running state
+    decay_states = jnp.exp(da_cum[:, :, -1:, :] - da_cum)   # (B,nc,q,H)
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn", bc, decay_states * dtc, xc)
+
+    # 3. inter-chunk recurrence on the compressed state
+    chunk_decay = jnp.exp(da_cum[:, :, -1, :])              # (B,nc,H)
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit the state *entering* the chunk
+
+    init = jnp.zeros((bsz, h, p, n), x.dtype)
+    final, prev_states = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)      # (B,nc,H,P,N)
+
+    # 4. state -> output within each chunk
+    state_decay = jnp.exp(da_cum)                            # (B,nc,q,H)
+    y_off = jnp.einsum(
+        "bcqn,bchpn,bcqh->bcqhp", cc, prev_states, state_decay
+    )
+    y = (y_diag + y_off).reshape(bsz, s_pad, h, p)[:, :s]
+    return y, final
+
+
+def ssm_fwd(p, x, cfg: ArchConfig):
+    """Full-sequence SSD block. x: (B, S, D) -> (B, S, D), plus final cache."""
+    bsz, s, d = x.shape
+    di, n, hds, hp = cfg.d_inner_resolved, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    z, xbc, dt = _split_in(p, x, cfg)
+    xbc = _conv_full(p, xbc, cfg)
+    xin, b, c = jnp.split(xbc, [di, di + n], axis=-1)
+    xin = hint(xin.reshape(bsz, s, hds, hp), ("batch", "seq", "heads", None))
+    dt = jax.nn.softplus(dt + p["dt_bias"])                  # (B,S,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))             # (H,)
+    y, final = ssd_chunked(
+        xin.astype(jnp.float32), dt.astype(jnp.float32), a,
+        b.astype(jnp.float32), c.astype(jnp.float32), cfg.ssm_chunk
+    )
+    y = y + xin.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = _proj(y, p["out_proj"], cfg)
+    cache = {
+        "state": final.astype(jnp.float32),                  # (B,H,P,N)
+        "conv": xbc_tail(p, x, cfg),                         # (B,K-1,C)
+    }
+    return out, cache
+
+
+def xbc_tail(p, x, cfg: ArchConfig):
+    """Last K-1 pre-conv channels, seeding the decode conv cache."""
+    _, xbc, _ = _split_in(p, x[:, -(cfg.ssm_conv - 1):, :], cfg)
+    return xbc
+
+
+def ssm_cache_defs(cfg: ArchConfig, batch: int):
+    di, n = cfg.d_inner_resolved, cfg.ssm_state
+    return {
+        "state": ddef((batch, cfg.ssm_heads, cfg.ssm_headdim, n),
+                      ("batch", "heads", None, None), init="zeros"),
+        "conv": ddef((batch, cfg.ssm_conv - 1, di + 2 * n),
+                     ("batch", None, "dinner"), init="zeros"),
+    }
+
+
+def ssm_decode(p, x, cfg: ArchConfig, cache):
+    """One-token recurrent update. x: (B, 1, D)."""
+    bsz = x.shape[0]
+    di, n, hds, hp = cfg.d_inner_resolved, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    z, xbc, dt = _split_in(p, x, cfg)                        # (B,1,*)
+    window = jnp.concatenate([cache["conv"], xbc], axis=1)   # (B,K,C)
+    w = p["conv_w"]
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"]
+    xbc1 = jax.nn.silu(conv_out)[:, None, :]
+    xin, b, c = jnp.split(xbc1, [di, di + n], axis=-1)
+    xin = xin.reshape(bsz, hds, hp).astype(jnp.float32)
+    dt1 = jax.nn.softplus(dt[:, 0] + p["dt_bias"]).astype(jnp.float32)  # (B,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt1 * a)                                 # (B,H)
+    bt = b[:, 0].astype(jnp.float32)                         # (B,N)
+    ct = c[:, 0].astype(jnp.float32)
+    new_state = (
+        cache["state"] * decay[:, :, None, None]
+        + jnp.einsum("bh,bhp,bn->bhpn", dt1, xin, bt)
+    )
+    y = jnp.einsum("bhpn,bn->bhp", new_state, ct)
+    y = y + xin * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = _proj(y, p["out_proj"], cfg)
+    new_cache = {"state": new_state, "conv": window[:, 1:, :]}
+    return out, new_cache

@@ -1,0 +1,3 @@
+from .adamw import (AdamWConfig, apply_updates, clip_by_global_norm,
+                    init_state, schedule, state_spec_tree, state_specs,
+                    state_structs)

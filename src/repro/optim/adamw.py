@@ -1,0 +1,171 @@
+"""AdamW with bf16 params + f32 master/moment states, FSDP-shardable.
+
+Optimizer state mirrors the param pytree so the same logical-axis specs (and
+therefore the same FSDP sharding) apply to master weights and both moments —
+the ZeRO pattern falls out of dist.sharding rather than bespoke partitioning
+code. Gradient clipping (global norm) and optional gradient compression hooks
+(dist.compression) are applied before the moment update.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    # memory-reduced state (for 100B+ models where f32 m+v dominate HBM):
+    #   m_dtype="bfloat16"  halves the first moment;
+    #   factored_v=True     stores the second moment of >=2-D params as a
+    #                       rank-1 (row, col) factorization (Adafactor) —
+    #                       O(n+m) instead of O(n*m).
+    m_dtype: str = "float32"
+    factored_v: bool = False
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, cfg.warmup_steps)
+    denom = jnp.maximum(1.0, cfg.total_steps - cfg.warmup_steps)
+    t = jnp.clip((step - cfg.warmup_steps) / denom, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def _factorable(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+
+def _init_v(p, cfg: "AdamWConfig | None"):
+    if cfg is not None and cfg.factored_v and _factorable(p):
+        return {
+            "row": jnp.zeros(p.shape[:-1], jnp.float32),        # mean over cols
+            "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+        }
+    return jnp.zeros(p.shape, jnp.float32)
+
+
+def init_state(params, cfg: "AdamWConfig | None" = None) -> dict:
+    f32 = lambda p: p.astype(jnp.float32)
+    m_dtype = jnp.dtype(cfg.m_dtype) if cfg is not None else jnp.float32
+    return {
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, m_dtype), params),
+        "v": jax.tree.map(lambda p: _init_v(p, cfg), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def state_specs(param_specs) -> dict:
+    """Logical-axis specs for the optimizer state (mirrors params)."""
+    return {
+        "master": param_specs,
+        "m": param_specs,
+        "v": param_specs,
+        "step": (),
+    }
+
+
+def state_structs(p_structs, cfg: "AdamWConfig | None" = None):
+    """ShapeDtypeStructs for the optimizer state (dry-run twin of init_state)."""
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    m_dtype = jnp.dtype(cfg.m_dtype) if cfg is not None else jnp.float32
+
+    def v_struct(s):
+        if cfg is not None and cfg.factored_v and len(s.shape) >= 2 \
+                and s.shape[-1] > 1 and s.shape[-2] > 1:
+            return {
+                "row": jax.ShapeDtypeStruct(s.shape[:-1], jnp.float32),
+                "col": jax.ShapeDtypeStruct(s.shape[:-2] + s.shape[-1:], jnp.float32),
+            }
+        return f32(s)
+
+    return {
+        "master": jax.tree.map(f32, p_structs),
+        "m": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, m_dtype), p_structs),
+        "v": jax.tree.map(v_struct, p_structs),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def state_spec_tree(param_specs, p_structs, cfg: "AdamWConfig | None" = None):
+    """Logical-axis specs matching state_structs (factored v drops an axis)."""
+    def v_spec(spec, s):
+        spec = tuple(spec)
+        if cfg is not None and cfg.factored_v and len(s.shape) >= 2 \
+                and s.shape[-1] > 1 and s.shape[-2] > 1:
+            return {"row": spec[:-1], "col": spec[:-2] + spec[-1:]}
+        return spec
+
+    is_spec = lambda x: isinstance(x, (tuple, list))
+    return {
+        "master": param_specs,
+        "m": param_specs,
+        "v": jax.tree.map(v_spec, param_specs, p_structs, is_leaf=is_spec),
+        "step": (),
+    }
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def apply_updates(
+    state: dict,
+    grads,
+    cfg: AdamWConfig,
+    param_dtype=jnp.bfloat16,
+    grad_transform: Callable | None = None,
+):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    if grad_transform is not None:
+        grads = grad_transform(grads)
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    m_dtype = jnp.dtype(cfg.m_dtype)
+
+    def upd(master, m, v, g):
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        if isinstance(v, dict):  # factored second moment (Adafactor)
+            g2 = jnp.square(g) + 1e-30
+            row = cfg.b2 * v["row"] + (1 - cfg.b2) * jnp.mean(g2, axis=-1)
+            col = cfg.b2 * v["col"] + (1 - cfg.b2) * jnp.mean(g2, axis=-2)
+            # rank-1 reconstruction: v_ij ~= row_i * col_j / mean(row)
+            denom = jnp.maximum(jnp.mean(row, axis=-1, keepdims=True), 1e-30)
+            vh = (row[..., None] * col[..., None, :] / denom[..., None]) / b2c
+            new_v = {"row": row, "col": col}
+        else:
+            new_v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+            vh = new_v / b2c
+        mh = m32 / b1c
+        master = master - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * master)
+        return master, m32.astype(m_dtype), new_v
+
+    # note: v's factored leaves ({"row","col"} dicts) sit *below* master's
+    # leaves — jax.tree.map's prefix semantics deliver them whole to upd
+    new = jax.tree.map(upd, state["master"], state["m"], state["v"], grads)
+    master = jax.tree.map(lambda t: t[0], new, is_leaf=lambda t: isinstance(t, tuple))
+    m = jax.tree.map(lambda t: t[1], new, is_leaf=lambda t: isinstance(t, tuple))
+    v = jax.tree.map(lambda t: t[2], new, is_leaf=lambda t: isinstance(t, tuple))
+    params = jax.tree.map(lambda p: p.astype(param_dtype), master)
+    new_state = {"master": master, "m": m, "v": v, "step": step}
+    return params, new_state, {"grad_norm": gnorm, "lr": lr}

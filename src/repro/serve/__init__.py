@@ -1,0 +1,2 @@
+from .engine import ServeEngine, make_prefill, make_serve_step
+from .kv_cache import PagedCacheConfig, PagedKVManager, gather_cache

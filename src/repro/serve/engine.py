@@ -1,0 +1,78 @@
+"""Serving engine: batched prefill + decode with a static KV cache.
+
+`ServeEngine` handles a batch of requests end-to-end on CPU/TPU: right-pad
+prompts, one prefill, then jit'd decode steps with greedy or temperature
+sampling. `make_serve_step` builds the bare decode step the dry-run lowers
+(one new token against a seq_len cache) — that is the function whose roofline
+the decode_32k / long_500k cells measure.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import get_module
+
+
+def make_serve_step(cfg):
+    """serve_step(params, cache, token, cache_pos) -> (logits, new_cache)."""
+    mod = get_module(cfg)
+
+    def step(params, cache, token, cache_pos):
+        return mod.decode_step(params, cache, token, cache_pos, cfg)
+
+    return step
+
+
+def make_prefill(cfg, cache_len: int):
+    mod = get_module(cfg)
+    if cfg.family == "encdec":
+        def prefill(params, frames, tokens):
+            return mod.prefill(params, frames, tokens, cfg, cache_len=cache_len)
+    else:
+        def prefill(params, tokens):
+            return mod.prefill(params, tokens, cfg, cache_len=cache_len)
+    return prefill
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.mod = get_module(cfg)
+        self.prefill_fn = jax.jit(make_prefill(cfg, max_len))
+        self.step_fn = jax.jit(make_serve_step(cfg))
+
+    def generate(
+        self,
+        prompts: jax.Array,            # (B, P) int32, right-padded with 0
+        prompt_len: int,
+        max_new_tokens: int = 32,
+        temperature: float = 0.0,
+        key=None,
+        frames: jax.Array | None = None,
+    ):
+        if self.cfg.family == "encdec":
+            logits, cache = self.prefill_fn(self.params, frames, prompts)
+        else:
+            logits, cache = self.prefill_fn(self.params, prompts)
+        b = prompts.shape[0]
+        out = []
+        tok = self._sample(logits, temperature, key, 0)
+        pos = prompt_len
+        for i in range(max_new_tokens):
+            out.append(tok)
+            logits, cache = self.step_fn(self.params, cache, tok, jnp.int32(pos))
+            tok = self._sample(logits, temperature, key, i + 1)
+            pos += 1
+        return jnp.stack(out, axis=1)  # (B, max_new_tokens)
+
+    @staticmethod
+    def _sample(logits, temperature, key, i):
+        if temperature <= 0.0 or key is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        k = jax.random.fold_in(key, i)
+        return jax.random.categorical(k, logits / temperature, axis=-1).astype(jnp.int32)

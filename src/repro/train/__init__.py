@@ -1,0 +1,2 @@
+from .step import init_train_state, make_loss_fn, make_train_step
+from .trainer import Trainer

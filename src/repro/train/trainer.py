@@ -1,0 +1,107 @@
+"""Fault-tolerant training loop.
+
+Responsibilities beyond calling the step:
+  * checkpoint/restart — periodic async saves, resume from `latest`,
+    restart-exact data (batch is a pure function of step);
+  * straggler/hang watchdog — per-step wall time is tracked; steps slower
+    than `straggler_factor` x the trailing median are logged as stragglers
+    (on real fleets this feeds the health controller that triggers hot
+    spares; here it is surfaced in metrics and the heartbeat file);
+  * heartbeat — a small json blob per step for external supervisors;
+  * elastic restarts — restore() re-places arrays with the *current* mesh
+    shardings, so the same checkpoint resumes on a different topology.
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import time
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, batch_at_step
+from repro.optim import AdamWConfig
+from .step import init_train_state, make_train_step
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg,
+        data_cfg: DataConfig,
+        opt_cfg: AdamWConfig | None = None,
+        ckpt_dir: str | None = None,
+        ckpt_every: int = 50,
+        microbatches: int = 1,
+        compress_grads: bool = False,
+        straggler_factor: float = 2.0,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.data_cfg = data_cfg
+        self.opt_cfg = opt_cfg or AdamWConfig()
+        self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+        self.ckpt_every = ckpt_every
+        self.straggler_factor = straggler_factor
+        self.step_times: list[float] = []
+        self.stragglers: list[int] = []
+        self.step_fn = jax.jit(
+            make_train_step(cfg, self.opt_cfg, microbatches, compress_grads)
+        )
+        self.params, self.opt_state = init_train_state(jax.random.PRNGKey(seed), cfg)
+        self.start_step = 0
+        if self.ckpt is not None:
+            try:
+                state, step = self.ckpt.restore(
+                    {"params": self.params, "opt": self.opt_state}
+                )
+                self.params, self.opt_state = state["params"], state["opt"]
+                self.start_step = step
+            except FileNotFoundError:
+                pass
+
+    def _heartbeat(self, step, metrics, dt):
+        if self.ckpt is None:
+            return
+        hb = {
+            "step": int(step),
+            "loss": float(metrics["loss"]),
+            "step_time_s": dt,
+            "stragglers": self.stragglers[-5:],
+            "time": time.time(),
+        }
+        with open(os.path.join(self.ckpt.dir, "heartbeat.json"), "w") as f:
+            json.dump(hb, f)
+
+    def run(self, num_steps: int, log_every: int = 10, log_fn=print):
+        history = []
+        for step in range(self.start_step, self.start_step + num_steps):
+            batch_t = batch_at_step(self.data_cfg, step)
+            batch = {"tokens": batch_t[0], "labels": batch_t[1]}
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch
+            )
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            # straggler watchdog
+            if len(self.step_times) >= 5:
+                med = statistics.median(self.step_times[-20:])
+                if dt > self.straggler_factor * med:
+                    self.stragglers.append(step)
+            self.step_times.append(dt)
+            history.append(float(metrics["loss"]))
+            self._heartbeat(step, metrics, dt)
+            if step % log_every == 0:
+                log_fn(
+                    f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                    f"gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f} ms"
+                )
+            if self.ckpt is not None and (step + 1) % self.ckpt_every == 0:
+                self.ckpt.save(step + 1, {"params": self.params, "opt": self.opt_state})
+        if self.ckpt is not None:
+            self.ckpt.save(self.start_step + num_steps,
+                           {"params": self.params, "opt": self.opt_state}, blocking=True)
+        return history

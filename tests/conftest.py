@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Tests run on the single host CPU device (the dry-run's 512-device env var
+# is set ONLY inside launch/dryrun.py / its subprocess tests).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

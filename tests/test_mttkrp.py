@@ -1,0 +1,119 @@
+"""MTTKRP paths agree; CP1-3 primitives; hypothesis invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mttkrp import (
+    dense_to_coo,
+    khatri_rao,
+    matricize,
+    mttkrp_dense,
+    mttkrp_dense_kr,
+    mttkrp_sparse,
+    mttkrp_sparse_psram,
+)
+from repro.core.primitives import (
+    cp1_exact, cp1_on_array, cp1_psram, cp2_exact, cp2_psram,
+    row_update_exact, row_update_psram,
+)
+from repro.core.psram import PsramConfig
+
+
+def _rand_tensor_factors(key, shape, rank):
+    ks = jax.random.split(key, len(shape) + 1)
+    x = jax.random.normal(ks[0], shape)
+    fs = [jax.random.normal(k, (s, rank)) for k, s in zip(ks[1:], shape)]
+    return x, fs
+
+
+@pytest.mark.parametrize("shape,rank", [((6, 5, 4), 3), ((4, 7, 3, 5), 2)])
+@pytest.mark.parametrize("mode", [0, 1, 2])
+def test_dense_paths_agree(key, shape, rank, mode):
+    if mode >= len(shape):
+        pytest.skip("mode out of range")
+    x, fs = _rand_tensor_factors(key, shape, rank)
+    a = mttkrp_dense(x, fs, mode)
+    b = mttkrp_dense_kr(x, fs, mode)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mode", [0, 1, 2])
+def test_sparse_matches_dense(key, mode):
+    x, fs = _rand_tensor_factors(key, (5, 4, 6), 3)
+    idx, vals = dense_to_coo(x)
+    a = mttkrp_dense(x, fs, mode)
+    b = mttkrp_sparse(idx, vals, tuple(fs), mode, x.shape[mode])
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-4)
+
+
+def test_sparse_psram_close(key):
+    x, fs = _rand_tensor_factors(key, (6, 5, 4), 3)
+    idx, vals = dense_to_coo(x)
+    exact = mttkrp_dense(x, fs, 0)
+    q = mttkrp_sparse_psram(idx, vals, tuple(fs), 0, 6)
+    rel = float(jnp.linalg.norm(q - exact) / jnp.linalg.norm(exact))
+    assert rel < 0.03
+
+
+def test_khatri_rao_shape_and_values():
+    b = jnp.array([[1.0, 2.0], [3.0, 4.0]])
+    c = jnp.array([[5.0, 6.0], [7.0, 8.0], [9.0, 10.0]])
+    kr = khatri_rao([b, c])
+    assert kr.shape == (6, 2)
+    np.testing.assert_allclose(np.asarray(kr[0]), [5.0, 12.0])   # b0*c0
+    np.testing.assert_allclose(np.asarray(kr[5]), [27.0, 40.0])  # b1*c2
+
+
+def test_matricize_definition(key):
+    x = jax.random.normal(key, (3, 4, 5))
+    x0 = matricize(x, 0)
+    assert x0.shape == (3, 20)
+    # X_(0)[i, j*K + k] == X[i, j, k]
+    assert float(x0[1, 2 * 5 + 3]) == float(x[1, 2, 3])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2), st.integers(1, 4))
+def test_mttkrp_linearity(mode, rank):
+    """MTTKRP is linear in the tensor: M(aX + bY) = a M(X) + b M(Y)."""
+    key = jax.random.PRNGKey(rank)
+    x, fs = _rand_tensor_factors(key, (4, 3, 5), rank)
+    y, _ = _rand_tensor_factors(jax.random.PRNGKey(99), (4, 3, 5), rank)
+    lhs = mttkrp_dense(2.0 * x - 3.0 * y, fs, mode)
+    rhs = 2.0 * mttkrp_dense(x, fs, mode) - 3.0 * mttkrp_dense(y, fs, mode)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-3, atol=1e-3)
+
+
+def test_rank1_factor_recovery(key):
+    """For X = a ∘ b ∘ c, MTTKRP against (b, c) returns a * <b,b><c,c>."""
+    a = jax.random.normal(key, (6,))
+    b = jax.random.normal(jax.random.PRNGKey(1), (5,))
+    c = jax.random.normal(jax.random.PRNGKey(2), (4,))
+    x = a[:, None, None] * b[None, :, None] * c[None, None, :]
+    m = mttkrp_dense(x, [a[:, None], b[:, None], c[:, None]], 0)
+    expected = a * float(b @ b) * float(c @ c)
+    np.testing.assert_allclose(np.asarray(m[:, 0]), np.asarray(expected), rtol=1e-4)
+
+
+# ---- primitives ----
+
+def test_cp_chain_psram_close(key):
+    b = jax.random.normal(key, (16,))
+    c = jax.random.normal(jax.random.PRNGKey(1), (16,))
+    a = jax.random.normal(jax.random.PRNGKey(2), (16,))
+    exact = row_update_exact(a, 0.7, b, c)
+    q = row_update_psram(a, jnp.asarray(0.7), b, c)
+    assert float(jnp.linalg.norm(q - exact) / jnp.linalg.norm(exact)) < 0.02
+
+
+def test_cp1_on_physical_array(key):
+    """Driving the crossbar (wavelength-interleaved) == vectorized CP1."""
+    b = jax.random.normal(key, (10,))
+    c = jax.random.normal(jax.random.PRNGKey(1), (10,))
+    on_array = cp1_on_array(b, c, PsramConfig(rows=16, word_cols=4, wavelengths=4))
+    vec = cp1_psram(b, c)
+    exact = cp1_exact(b, c)
+    assert float(jnp.linalg.norm(on_array - exact) / jnp.linalg.norm(exact)) < 0.02
+    assert float(jnp.linalg.norm(vec - exact) / jnp.linalg.norm(exact)) < 0.02

@@ -1,0 +1,117 @@
+"""Perf-motivated features: vocab padding, stored-int8 weights, the
+delta-based decode path, and the append-attention equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.config import ArchConfig
+from repro.models.layers import (
+    _new_kv,
+    attention_decode,
+    attention_decode_append,
+    attention_defs,
+    init_params,
+)
+from repro.models.registry import get_config, get_module
+
+
+def test_vocab_padding_masks_pads(key):
+    cfg = dataclasses.replace(
+        get_config("granite_moe_1b_a400m").reduced(),
+        vocab_size=250, vocab_pad_multiple=64,   # padded -> 256
+    )
+    assert cfg.padded_vocab == 256
+    mod = get_module(cfg)
+    params = mod.init(key, cfg)
+    toks = jax.random.randint(key, (2, 8), 0, cfg.vocab_size)
+    logits = mod.forward(params, toks, cfg)
+    assert logits.shape[-1] == 256
+    # pad columns can never win an argmax and never dominate the lse
+    assert bool(jnp.all(logits[..., cfg.vocab_size:] <= -1e29))
+    loss = mod.loss_fn(params, toks, jnp.roll(toks, -1, 1), cfg)
+    assert bool(jnp.isfinite(loss))
+
+
+def test_vocab_padding_decode_consistent(key):
+    cfg = dataclasses.replace(
+        get_config("chatglm3_6b").reduced(), vocab_pad_multiple=64
+    )
+    mod = get_module(cfg)
+    params = mod.init(key, cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 0, cfg.vocab_size)
+    full = mod.forward(params, toks, cfg)
+    _, cache = mod.prefill(params, toks[:, :8], cfg, cache_len=12)
+    lg, _ = mod.decode_step(params, cache, toks[:, 8], jnp.int32(8), cfg)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, 8]),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ["granite_8b", "dbrx_132b", "jamba_1p5_large"])
+def test_stored_int8_decode_matches_forward(key, arch):
+    """The paper's stationary-weight path must stay self-consistent."""
+    cfg = dataclasses.replace(
+        get_config(arch).reduced(), psram_projections=True, psram_stored_int8=True
+    )
+    mod = get_module(cfg)
+    params = mod.init(key, cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 0, cfg.vocab_size)
+    full = mod.forward(params, toks, cfg)
+    _, cache = mod.prefill(params, toks[:, :8], cfg, cache_len=12)
+    lg, _ = mod.decode_step(params, cache, toks[:, 8], jnp.int32(8), cfg)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, 8]),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_append_attention_equals_update_attention(key):
+    """attention_decode_append(k_old, token) == attention_decode(cache+token)."""
+    cfg = ArchConfig(name="t", d_model=64, n_heads=4, n_kv_heads=2,
+                     head_dim=16, dtype="float32")
+    p = init_params(key, attention_defs(cfg))
+    b, s, pos = 2, 12, 7
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, 1, cfg.d_model))
+    k_cache = jax.random.normal(jax.random.PRNGKey(2), (b, s, 2, 16))
+    v_cache = jax.random.normal(jax.random.PRNGKey(3), (b, s, 2, 16))
+    # classic path: write the token into the cache, attend
+    y_upd, _ = attention_decode(p, x, cfg, {"k": k_cache, "v": v_cache},
+                                jnp.int32(pos))
+    # append path: stale cache + explicit new token
+    y_app = attention_decode_append(p, x, cfg, k_cache, v_cache, jnp.int32(pos))
+    np.testing.assert_allclose(np.asarray(y_app), np.asarray(y_upd),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_append_attention_sliding_window(key):
+    cfg = ArchConfig(name="t", d_model=64, n_heads=4, n_kv_heads=4,
+                     head_dim=16, sliding_window=4, dtype="float32")
+    p = init_params(key, attention_defs(cfg))
+    b, s, pos = 1, 16, 10
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, 1, cfg.d_model))
+    k_cache = jax.random.normal(jax.random.PRNGKey(2), (b, s, 4, 16))
+    v_cache = jax.random.normal(jax.random.PRNGKey(3), (b, s, 4, 16))
+    y_upd, _ = attention_decode(p, x, cfg, {"k": k_cache, "v": v_cache},
+                                jnp.int32(pos), layer_local=True)
+    y_app = attention_decode_append(p, x, cfg, k_cache, v_cache,
+                                    jnp.int32(pos), layer_local=True)
+    np.testing.assert_allclose(np.asarray(y_app), np.asarray(y_upd),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_seq_shard_rule():
+    """The --seq-shard rule puts leftover model axis on the sequence dim."""
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.dist.sharding import logical_to_spec
+    devs = np.array([jax.devices()[0]] * 256).reshape(16, 16)
+    mesh = Mesh(devs, ("data", "model"))
+    rules = {"seq": (("model",), ())}
+    # qwen2-vl-like: 28 heads don't divide 16 -> seq takes the model axis
+    spec = logical_to_spec(("batch", "seq", "heads", None),
+                           (32, 32768, 28, 128), mesh, rules=rules)
+    assert spec[1] == "model" and spec[2] is None
+    # granite-like: heads=32 divide -> heads win, seq stays unsharded
+    spec2 = logical_to_spec(("batch", "seq", "heads", None),
+                            (32, 32768, 32, 128), mesh, rules=rules)
+    assert spec2[2] == "model" and spec2[1] is None

@@ -1,0 +1,85 @@
+"""Paper-validation: the predictive performance model (§V, Fig. 5)."""
+import pytest
+
+from repro.core.perf_model import (
+    MTTKRPWorkload,
+    peak_petaops,
+    sustained_mttkrp,
+    sweep_channels,
+    sweep_frequency,
+    time_to_solution_s,
+    tpu_mttkrp_time_s,
+)
+from repro.core.psram import PsramConfig
+
+
+def test_headline_17_petaops():
+    """§V-B: 256x32 words, 52 channels, 20 GHz => 17 PetaOps."""
+    cfg = PsramConfig()
+    assert abs(peak_petaops(cfg) - 17.04) < 0.01
+    sb = sustained_mttkrp(cfg, MTTKRPWorkload())
+    assert 16.5 < sb.sustained_petaops <= 17.04  # sustained ~= the paper's 17
+
+
+def test_linear_in_channels():
+    pts = sweep_channels(channels=[13, 26, 52])
+    r1 = pts[1][1] / pts[0][1]
+    r2 = pts[2][1] / pts[1][1]
+    assert abs(r1 - 2.0) < 0.02 and abs(r2 - 2.0) < 0.02
+
+
+def test_linear_in_frequency():
+    pts = sweep_frequency(freqs=(5, 10, 20))
+    assert abs(pts[1][1] / pts[0][1] - 2.0) < 0.02
+    assert abs(pts[2][1] / pts[1][1] - 2.0) < 0.02
+
+
+def test_utilization_terms_bounded():
+    sb = sustained_mttkrp(PsramConfig(), MTTKRPWorkload(rank=32))
+    assert 0 < sb.fill_utilization <= 1
+    assert 0 < sb.wavelength_occupancy <= 1
+    assert 0 < sb.reconfig_efficiency <= 1
+    assert sb.sustained_petaops <= sb.peak_petaops
+
+
+def test_small_rank_underutilizes():
+    big = sustained_mttkrp(PsramConfig(), MTTKRPWorkload(rank=32))
+    # rank 200 leaves 56/256 rows dark (no second segment fits)
+    odd = sustained_mttkrp(PsramConfig(), MTTKRPWorkload(rank=200))
+    assert odd.fill_utilization < big.fill_utilization
+
+
+def test_time_to_solution_positive_and_sane():
+    wl = MTTKRPWorkload(i=1000, j=1000, k=1000, rank=32)
+    t = time_to_solution_s(PsramConfig(), wl)
+    assert t > 0
+    # 2*2*32*1e9 ops at ~16.8 PetaOps ~= 7.6us
+    assert t < 1e-3
+
+
+def test_tpu_comparison_slower_than_array():
+    wl = MTTKRPWorkload(i=10**4, j=10**4, k=10**4, rank=32)
+    t_psram = time_to_solution_s(PsramConfig(), wl)
+    t_tpu = tpu_mttkrp_time_s(wl)
+    assert t_tpu > t_psram  # the paper's claim: array >> single accelerator
+
+
+def test_energy_model_sane():
+    """Beyond-paper energy model: positive terms, array beats TPU wall power."""
+    from repro.core.perf_model import (
+        mttkrp_energy, ops_per_joule, tpu_ops_per_joule,
+    )
+    cfg = PsramConfig()
+    wl = MTTKRPWorkload(i=10**4, j=10**4, k=10**4, rank=32)
+    e = mttkrp_energy(cfg, wl)
+    assert e.total_j > 0
+    assert e.write_j > 0 and e.adc_j > 0
+    assert ops_per_joule(cfg, wl) > tpu_ops_per_joule(wl)
+
+
+def test_energy_scales_with_work():
+    from repro.core.perf_model import mttkrp_energy
+    cfg = PsramConfig()
+    small = mttkrp_energy(cfg, MTTKRPWorkload(i=1000, j=1000, k=1000, rank=8))
+    big = mttkrp_energy(cfg, MTTKRPWorkload(i=2000, j=2000, k=2000, rank=8))
+    assert big.total_j > small.total_j

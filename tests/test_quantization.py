@@ -1,0 +1,70 @@
+"""Property-based tests (hypothesis) for the quantization numerics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import (
+    QMAX,
+    dequantize,
+    fake_quant,
+    from_bitplanes,
+    quantize_symmetric,
+    to_bitplanes,
+)
+
+floats = st.lists(
+    st.floats(min_value=-1e4, max_value=1e4, allow_nan=False, width=32),
+    min_size=1, max_size=64,
+)
+
+
+@settings(max_examples=50, deadline=None)
+@given(floats)
+def test_quantize_roundtrip_bound(vals):
+    x = jnp.asarray(vals, dtype=jnp.float32)
+    q, s = quantize_symmetric(x)
+    err = jnp.abs(dequantize(q, s) - x)
+    # error bounded by half an LSB = scale/2 (+ eps slack)
+    assert float(jnp.max(err)) <= float(s) * 0.5 + 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(floats)
+def test_quantize_range(vals):
+    x = jnp.asarray(vals, dtype=jnp.float32)
+    q, _ = quantize_symmetric(x)
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= QMAX
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=-127, max_value=127))
+def test_bitplanes_scalar(v):
+    q = jnp.asarray([v], dtype=jnp.int8)
+    sg, pl = to_bitplanes(q)
+    assert int(from_bitplanes(sg, pl)[0]) == v
+
+
+@settings(max_examples=20, deadline=None)
+@given(floats)
+def test_fake_quant_is_projection(vals):
+    """Quantizing an already-quantized tensor is (near-)idempotent."""
+    x = jnp.asarray(vals, dtype=jnp.float32)
+    y = fake_quant(x)
+    z = fake_quant(y)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(z), rtol=1e-5, atol=1e-5)
+
+
+def test_fake_quant_gradient_straight_through(key):
+    x = jax.random.normal(key, (16,))
+    g = jax.grad(lambda t: jnp.sum(fake_quant(t) ** 2))(x)
+    # STE: grad = 2 * fake_quant(x) exactly (identity through the rounding)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(2 * fake_quant(x)), rtol=1e-5)
+
+
+def test_per_axis_scales(key):
+    x = jax.random.normal(key, (8, 4)) * jnp.array([1.0, 10.0, 100.0, 1000.0])
+    q, s = quantize_symmetric(x, axis=0)
+    assert s.shape == (1, 4)
+    rel = jnp.abs(dequantize(q, s) - x) / (jnp.abs(x) + 1e-9)
+    assert float(jnp.median(rel)) < 0.02

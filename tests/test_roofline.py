@@ -1,0 +1,87 @@
+"""Roofline HLO parser: exact FLOPs, trip counts, collective accounting."""
+import pytest
+
+from repro.launch.roofline import (
+    RooflineResult,
+    analyze_hlo,
+    parse_computations,
+    shape_bytes,
+    shape_dims,
+    wire_bytes,
+)
+
+SAMPLE = """\
+HloModule jit_f, num_partitions=8
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %gte = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%gte, %c), direction=LT
+}
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %g0 = s32[] get-tuple-element(%p), index=0
+  %g1 = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %one = s32[] constant(1)
+  %ar = f32[8,8]{1,0} all-reduce(%g1), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%add_comp
+  %d = f32[8,8]{1,0} dot(%ar, %g1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %inc = s32[] add(%g0, %one)
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%inc, %d)
+}
+
+%add_comp (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[8,8]) -> f32[8,8] {
+  %x = f32[8,8]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,8]{1,0}) tuple(%zero, %x)
+  %w = (s32[], f32[8,8]{1,0}) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_shape_parsing():
+    assert shape_bytes("f32[8,8]{1,0}") == 256
+    assert shape_bytes("bf16[4,4]") == 32
+    assert shape_bytes("(s32[], f32[2,2]{1,0})") == 4 + 16
+    assert shape_dims("f32[3,5,7]{2,1,0}") == [3, 5, 7]
+    assert shape_bytes("pred[]") == 1
+
+
+def test_wire_bytes_formulas():
+    assert wire_bytes("all-gather", 100, 800, 8) == 700
+    assert wire_bytes("all-reduce", 800, 800, 8) == 2 * 7 / 8 * 800
+    assert wire_bytes("reduce-scatter", 800, 100, 8) == 7 / 8 * 800
+    assert wire_bytes("collective-permute", 100, 100, 8) == 100
+
+
+def test_sample_program_exact():
+    res = analyze_hlo(SAMPLE)
+    # while trip count 5, dot = 2*8*8*8 flops per iteration
+    assert res.while_trip_counts == {"body": 5}
+    assert res.dot_flops == 5 * 2 * 8 * 8 * 8
+    ar = res.by_collective["all-reduce"]
+    assert ar["count"] == 5
+    assert ar["bytes"] == 5 * 256
+    assert ar["wire_bytes"] == 5 * 2 * 3 / 4 * 256
+
+
+def test_computations_parsed():
+    comps = parse_computations(SAMPLE)
+    assert set(comps) == {"cond", "body", "add_comp", "main"}
+    ops = [i.op for i in comps["body"]]
+    assert "dot" in ops and "all-reduce" in ops and "tuple" in ops
+
+
+def test_dominant_term():
+    r = RooflineResult(dot_flops=197e12, bytes_essential=1.0, collective_wire_bytes=1.0)
+    assert r.dominant() == "compute"
+    r2 = RooflineResult(dot_flops=1.0, bytes_essential=819e9 * 2, collective_wire_bytes=1.0)
+    assert r2.dominant() == "memory"

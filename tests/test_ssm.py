@@ -1,0 +1,77 @@
+"""Mamba-2 SSD: chunked scan vs naive recurrence; decode vs full forward."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.config import ArchConfig
+from repro.models.ssm import ssd_chunked, ssm_decode, ssm_defs, ssm_fwd
+from repro.models.layers import init_params
+
+
+def naive_ssd(x, dt, a, b, c):
+    """Direct recurrence h_t = exp(dt a) h + dt B x ; y = C h."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    state = jnp.zeros((bsz, h, p, n))
+    ys = []
+    for t in range(s):
+        decay = jnp.exp(dt[:, t] * a)                      # (B,H)
+        state = state * decay[:, :, None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt[:, t], x[:, t], b[:, t]
+        )
+        ys.append(jnp.einsum("bhpn,bn->bhp", state, c[:, t]))
+    return jnp.stack(ys, axis=1), state
+
+
+@pytest.mark.parametrize("s,chunk", [(16, 4), (24, 8), (8, 8)])
+def test_ssd_chunked_matches_naive(key, s, chunk):
+    bsz, h, p, n = 2, 3, 4, 5
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (bsz, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bsz, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    b = jax.random.normal(ks[3], (bsz, s, n))
+    c = jax.random.normal(ks[4], (bsz, s, n))
+    y_c, st_c = ssd_chunked(x, dt, a, b, c, chunk)
+    y_n, st_n = naive_ssd(x, dt, a, b, c)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_n), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_c), np.asarray(st_n), rtol=1e-3, atol=1e-3)
+
+
+def _tiny_cfg():
+    return ArchConfig(
+        name="ssm-test", family="ssm", d_model=32, d_inner=64,
+        ssm_state=8, ssm_headdim=16, ssm_chunk=4, dtype="float32",
+    )
+
+
+def test_ssm_block_decode_matches_fwd(key):
+    cfg = _tiny_cfg()
+    p = init_params(key, ssm_defs(cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    y_full, cache = ssm_fwd(p, x, cfg)
+    # replay the last token through the decode path using the cache state
+    # built from the first 7 tokens
+    y7, cache7 = ssm_fwd(p, x[:, :7, :], cfg)
+    y_dec, _ = ssm_decode(p, x[:, 7:8, :], cfg, cache7)
+    np.testing.assert_allclose(
+        np.asarray(y_dec[:, 0]), np.asarray(y_full[:, 7]), rtol=5e-3, atol=5e-3
+    )
+
+
+def test_ssm_state_continuity(key):
+    """fwd(x) final state == fwd(x1)+decode-steps over x2 states."""
+    cfg = _tiny_cfg()
+    p = init_params(key, ssm_defs(cfg))
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 12, cfg.d_model))
+    _, cache_full = ssm_fwd(p, x, cfg)
+    _, cache = ssm_fwd(p, x[:, :8, :], cfg)
+    for t in range(8, 12):
+        _, cache = ssm_decode(p, x[:, t : t + 1, :], cfg, cache)
+    np.testing.assert_allclose(
+        np.asarray(cache["state"]), np.asarray(cache_full["state"]),
+        rtol=5e-3, atol=5e-3,
+    )

@@ -94,40 +94,70 @@ class PsramArray:
 
     def stored_values(self) -> jax.Array:
         """Read back the programmed (dequantized) weights."""
+        return dequantize(self._signed_words().astype(jnp.int8), self.scale)
+
+    def _signed_words(self) -> jax.Array:
+        """(rows, cols) signed integer word values read from the bit-planes."""
         shifts = jnp.arange(WORD_BITS, dtype=jnp.int32)
-        mag = jnp.sum(self.planes.astype(jnp.int32) << shifts, axis=-1)
-        return dequantize((self.sign.astype(jnp.int32) * mag).astype(jnp.int8), self.scale)
+        word_val = jnp.sum(self.planes.astype(jnp.int32) << shifts, axis=-1)
+        return self.sign.astype(jnp.int32) * word_val
 
     def multiply_accumulate(
         self, intensities: jax.Array, channel_of_row: jax.Array
     ) -> jax.Array:
         """Drive the array for one optical cycle.
 
-        intensities:    (rows,) float — intensity-encoded word-line inputs.
-        channel_of_row: (rows,) int32 — which wavelength channel each row's
-                        comb-shaper modulates (values in [0, wavelengths)).
+        Two drive modes share the same physics:
+
+        * per-row channels — intensities (rows,), channel_of_row (rows,):
+          each word-line carries one input on its own channel. Rows sharing
+          a channel sum together on the bit-line (Fig. 2); rows on distinct
+          channels stay separate.
+        * WDM batching — intensities (B, rows), channel_of_row (B,) with
+          B <= wavelengths and distinct channels: B whole input vectors ride
+          the array simultaneously, drive vector b modulated onto channel
+          channel_of_row[b] on every word-line (hyperspectral batching,
+          §IV-A). Each vector gets its own intensity quantization scale —
+          bit-identical to B separate single-vector cycles.
 
         Returns (word_cols, wavelengths) float32 — per-column, per-wavelength
-        ADC-digitized accumulations. Rows sharing a channel sum together on
-        the bit-line (Fig. 2); rows on distinct channels stay separate.
+        ADC-digitized accumulations.
         """
         cfg = self.config
+        full_scale = float(QMAX) * float(QMAX) * cfg.rows
+        signed_word = self._signed_words()  # (rows, cols)
+
+        if intensities.ndim == 2:  # WDM batching: one vector per channel
+            b = intensities.shape[0]
+            if b > cfg.wavelengths:
+                raise ValueError(
+                    f"{b} drive vectors exceed {cfg.wavelengths} WDM channels"
+                )
+            if not isinstance(channel_of_row, jax.core.Tracer):
+                chans = np.asarray(channel_of_row)
+                if len(np.unique(chans)) != b or chans.max(initial=0) >= cfg.wavelengths:
+                    raise ValueError(
+                        "WDM batching needs one distinct in-range channel per "
+                        f"drive vector, got {chans}"
+                    )
+            qx, sx = quantize_symmetric(intensities, axis=1)  # (B, rows), (B, 1)
+            # all rows of vector b share channel b, so the bit-line sum is a
+            # plain int dot per (vector, column)
+            acc = jnp.matmul(qx.astype(jnp.int32), signed_word)  # (B, cols)
+            acc = adc_requantize(acc, cfg.adc, full_scale)
+            vals = acc * (sx * self.scale)  # (B, cols)
+            out = jnp.zeros((cfg.word_cols, cfg.wavelengths), jnp.float32)
+            return out.at[:, channel_of_row].set(vals.T)
+
         qx, sx = quantize_symmetric(intensities)
         qx = qx.astype(jnp.int32)  # (rows,)
-
         # per-bit optical product, bit-significance scaling at output encoder
-        shifts = jnp.arange(WORD_BITS, dtype=jnp.int32)
-        word_val = jnp.sum(self.planes.astype(jnp.int32) << shifts, axis=-1)  # (rows, cols)
-        signed_word = self.sign.astype(jnp.int32) * word_val
         products = qx[:, None] * signed_word  # (rows, cols) integer photocurrents
-
         # photodetector accumulation: segment-sum rows by wavelength channel
         onehot = (
             channel_of_row[:, None] == jnp.arange(cfg.wavelengths)[None, :]
         ).astype(jnp.int32)  # (rows, wavelengths)
         acc = jnp.einsum("rc,rw->cw", products, onehot)  # (cols, wavelengths)
-
-        full_scale = float(QMAX) * float(QMAX) * cfg.rows
         acc = adc_requantize(acc, cfg.adc, full_scale)
         return acc * (sx * self.scale.reshape(-1, 1))
 
@@ -158,14 +188,15 @@ def matmul_via_array(x: jax.Array, w: jax.Array, config: PsramConfig | None = No
             tile = arr.store(w[k0:k1, n0:n1])
             for m0 in range(0, M, cfg.wavelengths):
                 m1 = min(m0 + cfg.wavelengths, M)
-                # issue up to `wavelengths` input vectors, one per channel:
-                # physically these share the array via WDM; numerically each
-                # channel is an independent MAC, so loop and stack.
-                cols = []
-                for m in range(m0, m1):
-                    xt = jnp.zeros((cfg.rows,)).at[: k1 - k0].set(x[m, k0:k1])
-                    chan = jnp.zeros((cfg.rows,), dtype=jnp.int32)
-                    acc = tile.multiply_accumulate(xt, chan)  # (cols, wavelengths)
-                    cols.append(np.asarray(acc[:, 0]))
-                out[m0:m1, n0:n1] += np.stack(cols)[:, : n1 - n0]
+                # issue up to `wavelengths` input vectors in ONE optical
+                # cycle, vector i on channel i (hyperspectral batching); the
+                # result comes back off the wavelength axis.
+                xt = (
+                    jnp.zeros((m1 - m0, cfg.rows))
+                    .at[:, : k1 - k0]
+                    .set(x[m0:m1, k0:k1])
+                )
+                chan = jnp.arange(m1 - m0, dtype=jnp.int32)
+                acc = tile.multiply_accumulate(xt, chan)  # (cols, wavelengths)
+                out[m0:m1, n0:n1] += np.asarray(acc[: n1 - n0, : m1 - m0].T)
     return jnp.asarray(out)

@@ -1,0 +1,74 @@
+"""Int8 gradient compression for cross-pod reduction.
+
+Gradients crossing the (slow) pod interconnect are symmetric-int8 quantized
+— 4x fewer bytes than f32 — and dequantized before the optimizer update, so
+the moment math stays f32. Two flavors:
+
+* plain (:func:`make_grad_transform`): quantize-dequantize each step; the
+  per-step bias is bounded by half the quantization step;
+* error feedback (:func:`compress_tree` with a residual): the quantization
+  error of step t is carried and added back at step t+1 (EF-SGD), making the
+  compression unbiased over time.
+
+Scales are per-tensor by default; ``block=`` switches to per-block scales
+(flattened contiguous blocks), bounding the error by each block's own step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import quantize_symmetric
+
+
+def compress_int8(g: jax.Array, block: int | None = None):
+    """Quantize ``g`` to int8. Returns ``(q, scale)`` with ``q`` shaped like
+    ``g``; ``scale`` is a scalar (per-tensor) or ``(n_blocks, 1)`` when
+    ``block`` is given (``g.size`` must divide into blocks)."""
+    g32 = g.astype(jnp.float32)
+    if block is None:
+        return quantize_symmetric(g32)
+    assert g.size % block == 0, (g.shape, block)
+    q, scale = quantize_symmetric(g32.reshape(-1, block), axis=1)
+    return q.reshape(g.shape), scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`compress_int8` (shape-preserving)."""
+    if scale.ndim >= 2:  # per-block scales
+        deq = q.astype(jnp.float32).reshape(scale.shape[0], -1) * scale
+        return deq.reshape(q.shape)
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(tree, residual=None, block: int | None = None):
+    """Quantize-dequantize a gradient pytree, returning ``(deq, residual)``.
+
+    ``residual`` (same structure, or None) is the error-feedback carry: it is
+    added to the incoming gradients before quantization, and the returned
+    residual is exactly what this round failed to transmit
+    (``deq + residual == grads + carried``).
+    """
+    if residual is not None:
+        tree = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r, tree, residual)
+
+    def one(g):
+        q, s = compress_int8(g, block=block)
+        return decompress_int8(q, s)
+
+    deq = jax.tree.map(one, tree)
+    new_residual = jax.tree.map(lambda g, d: g.astype(jnp.float32) - d, tree, deq)
+    return deq, new_residual
+
+
+def make_grad_transform(compress: bool = True, block: int | None = None):
+    """Gradient transform for ``optim.apply_updates``: int8 quantize-dequantize
+    each leaf, or None (identity) when compression is off."""
+    if not compress:
+        return None
+
+    def transform(grads):
+        deq, _ = compress_tree(grads, block=block)
+        return deq
+
+    return transform

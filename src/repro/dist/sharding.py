@@ -1,0 +1,220 @@
+"""Logical-axis sharding: map logical tensor axes onto mesh axes.
+
+Models describe tensors with *logical* axis names (``("embed", "ff")``,
+``("batch", "seq_kv", "kv_heads", None)``); this module decides which *mesh*
+axes ("pod", "data", "model") each one occupies. One rule set serves every
+consumer — model activation hints, parameter/optimizer-state shardings in the
+dry-run, and the data-batch in_shardings — so tensor parallelism, (pod-)data
+parallelism, FSDP and sequence parallelism all fall out of the same function.
+
+Assignment is priority-ordered with divisibility fallback:
+
+1. *Primary* claims first, in position order: tensor-parallel names
+   ("ff", "qdim", "kvdim", "heads", "kv_heads", "experts", "vocab") claim the
+   "model" axis; "batch" claims the data axes — ``("pod", "data")`` together
+   on a 3-D mesh, "data" alone otherwise; under FSDP, "embed" claims the data
+   axes too (ZeRO: params and optimizer state shard over data).
+2. *Fallback* claims second: "seq_kv" (and, via ``rules``, "seq") picks up
+   the "model" axis only when no primary claimer used it — sequence
+   parallelism kicks in exactly when heads/ff could not shard.
+3. A dimension that does not divide the claimed axes' product stays
+   unsharded, and no mesh axis is ever assigned twice within one spec.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Mesh-axis claims. Each candidate is a tuple of mesh axes claimed *together*
+# (the dimension shards over their size product). Candidates are tried in
+# order; absent mesh axes are dropped from a candidate before trying it.
+_MODEL = (("model",),)
+_DATA = (("pod", "data"), ("data",))
+
+# Tensor-parallel and batch-parallel logical names (primary claimers).
+PRIMARY_CLAIMS = {
+    "ff": _MODEL,
+    "qdim": _MODEL,
+    "kvdim": _MODEL,
+    "heads": _MODEL,
+    "kv_heads": _MODEL,
+    "experts": _MODEL,
+    "vocab": _MODEL,
+    "batch": _DATA,
+}
+
+# Names that claim the data axes only under FSDP (ZeRO parameter sharding).
+FSDP_CLAIMS = {"embed": _DATA}
+
+# Built-in fallback rules: {logical name: (fallback claims, primary claims)}.
+# "seq_kv" always opts into KV-cache sequence parallelism; activations' "seq"
+# opts in via the --seq-shard rule, e.g. rules={"seq": (("model",), ())}.
+DEFAULT_RULES = {"seq_kv": (("model",), ())}
+
+
+def _axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _normalize(cand, sizes):
+    """A claim entry may be one axis name or a tuple of names; keep only the
+    axes this mesh actually has."""
+    cand = (cand,) if isinstance(cand, str) else tuple(cand)
+    return tuple(a for a in cand if a in sizes)
+
+
+def _try_claim(dim, cand, sizes, used):
+    """Claim ``cand`` for a dimension of size ``dim`` if every axis is free
+    and ``dim`` divides their product; returns the claimed tuple or None."""
+    if not cand or any(a in used for a in cand):
+        return None
+    prod = 1
+    for a in cand:
+        prod *= sizes[a]
+    if dim % prod != 0:
+        return None
+    used.update(cand)
+    return cand
+
+
+def _merged_rules(rules):
+    merged = dict(DEFAULT_RULES)
+    merged.update(rules or {})
+    return merged
+
+
+def logical_to_spec(axes, shape, mesh: Mesh, fsdp: bool = False, rules=None) -> P:
+    """Compute the PartitionSpec for a tensor with logical ``axes``/``shape``.
+
+    ``axes`` entries are logical names or None (never sharded); ``rules``
+    maps logical names to ``(fallback_claims, primary_claims)`` tuples and
+    overrides/extends :data:`DEFAULT_RULES`.
+    """
+    axes = tuple(axes)
+    shape = tuple(shape)
+    assert len(axes) == len(shape), (axes, shape)
+    sizes = _axis_sizes(mesh)
+    merged = _merged_rules(rules)
+    assigned: list[tuple | None] = [None] * len(axes)
+    used: set[str] = set()
+
+    def claims_for(name):
+        out = []
+        if name in merged:
+            out.extend(merged[name][1])  # rule-provided primary claims
+        out.extend(PRIMARY_CLAIMS.get(name, ()))
+        if fsdp:
+            out.extend(FSDP_CLAIMS.get(name, ()))
+        return out
+
+    # pass 1: primary claims, position order
+    for i, (name, dim) in enumerate(zip(axes, shape)):
+        if name is None:
+            continue
+        seen = set()
+        for cand in claims_for(name):
+            cand = _normalize(cand, sizes)
+            if cand in seen:
+                continue
+            seen.add(cand)
+            got = _try_claim(dim, cand, sizes, used)
+            if got:
+                assigned[i] = got
+                break
+
+    # pass 2: fallback claims pick up leftover axes (sequence parallelism)
+    for i, (name, dim) in enumerate(zip(axes, shape)):
+        if assigned[i] is not None or name is None or name not in merged:
+            continue
+        for cand in merged[name][0]:
+            got = _try_claim(dim, _normalize(cand, sizes), sizes, used)
+            if got:
+                assigned[i] = got
+                break
+
+    entries = [a[0] if a and len(a) == 1 else a for a in assigned]
+    return P(*entries)
+
+
+def tree_shardings(structs, specs, mesh: Mesh, fsdp: bool = False, rules=None):
+    """NamedShardings for a pytree of ShapeDtypeStructs + logical-spec tree.
+
+    ``specs`` mirrors ``structs`` with a tuple of logical names at each leaf
+    (the ``specs_of``/``state_spec_tree`` output).
+    """
+    def one(s, ax):
+        return NamedSharding(
+            mesh, logical_to_spec(tuple(ax), s.shape, mesh, fsdp, rules)
+        )
+
+    return jax.tree.map(one, structs, specs)
+
+
+# ---------------------------------------------------------------------------
+# FSDP heuristic
+# ---------------------------------------------------------------------------
+
+# Bytes per parameter resident on a chip. Serving keeps bf16 weights only;
+# training adds the f32 master copy and both f32 Adam moments.
+SERVE_BYTES_PER_PARAM = 2
+TRAIN_BYTES_PER_PARAM = 2 + 4 + 4 + 4
+# Shard over data when tensor parallelism alone leaves more than this per
+# device — 10 GB of a 16 GB HBM part, keeping headroom for activations.
+FSDP_THRESHOLD_BYTES = 10e9
+
+
+def estimate_fsdp(param_count: int, mesh: Mesh, training: bool = False) -> bool:
+    """Should this model train/serve with FSDP on this mesh?
+
+    With tensor parallelism only, params (and in training the optimizer
+    state) replicate over the data axes; per-device bytes are
+    ``param_count * bytes_per_param / model_axis_size``. Above the HBM
+    headroom threshold the data axes must shard them too (ZeRO/FSDP).
+    """
+    model = _axis_sizes(mesh).get("model", 1)
+    bpp = TRAIN_BYTES_PER_PARAM if training else SERVE_BYTES_PER_PARAM
+    return param_count * bpp / model > FSDP_THRESHOLD_BYTES
+
+
+# ---------------------------------------------------------------------------
+# hint() and the sharding context
+# ---------------------------------------------------------------------------
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.stack: list[tuple] = []
+
+
+_ctx = _Ctx()
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, fsdp: bool = False, rules=None):
+    """Activate logical-axis constraints: inside this context (and inside a
+    jit trace), :func:`hint` applies ``with_sharding_constraint`` with the
+    spec computed by :func:`logical_to_spec`; outside it, hints are no-ops —
+    the same model code runs unmodified on a laptop and on a 512-chip mesh.
+    """
+    _ctx.stack.append((mesh, fsdp, rules))
+    try:
+        yield
+    finally:
+        _ctx.stack.pop()
+
+
+def hint(x, *axes):
+    """Annotate ``x`` with logical axis names (a tuple or varargs).
+
+    No-op outside a :func:`use_sharding` context or outside a trace; inside
+    both, constrains ``x`` to the spec the active mesh/rules imply.
+    """
+    if len(axes) == 1 and isinstance(axes[0], (tuple, list)):
+        axes = tuple(axes[0])
+    if not _ctx.stack or not isinstance(x, jax.core.Tracer):
+        return x
+    mesh, fsdp, rules = _ctx.stack[-1]
+    spec = logical_to_spec(axes, x.shape, mesh, fsdp, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

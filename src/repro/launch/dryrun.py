@@ -135,6 +135,8 @@ def lower_cell(cfg, shape, mesh, *, microbatches=8, fsdp="auto", rules=None,
 
     mem = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax returns [dict], newer dict
+        ca = ca[0] if ca else {}
     roof = analyze_hlo(compiled.as_text())
     n_chips = chips(mesh)
     mf_global = model_flops(cfg, shape.kind, shape.seq_len, shape.global_batch)
@@ -183,6 +185,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all")
     ap.add_argument("--shape", default="all")
+    ap.add_argument("--reduced", action="store_true",
+                    help="lower the tiny same-family configs (fast CPU check "
+                         "of the full sharding/lower/compile path)")
     ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
     ap.add_argument("--microbatches", type=int, default=8)
     ap.add_argument("--fsdp", default="auto")
@@ -238,6 +243,8 @@ def main():
                                  "mesh": "multi" if multi else "single"})
                     continue
                 cfg, shape = built
+                if args.reduced:
+                    cfg = cfg.reduced()
                 if args.no_remat:
                     cfg = dataclasses.replace(cfg, remat=False)
                 if args.full_remat:

@@ -13,6 +13,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--model-parallel", type=int, default=0,
+                    help="build a (data, model) host mesh with this model-"
+                         "axis size and serve under use_sharding")
     args = ap.parse_args()
 
     import jax
@@ -26,7 +29,12 @@ def main():
         cfg = cfg.reduced()
     mod = get_module(cfg)
     params = mod.init(jax.random.PRNGKey(0), cfg)
-    eng = ServeEngine(cfg, params, max_len=args.prompt_len + args.max_new)
+    mesh = None
+    if args.model_parallel:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(model=args.model_parallel)
+    eng = ServeEngine(cfg, params, max_len=args.prompt_len + args.max_new,
+                      mesh=mesh)
     prompts = jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 2, cfg.vocab_size
     ).astype(jnp.int32)

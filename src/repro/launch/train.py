@@ -27,6 +27,14 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="carry the int8 compression residual across steps "
+                         "(EF-SGD; implies --compress-grads semantics)")
+    ap.add_argument("--model-parallel", type=int, default=0,
+                    help="build a (data, model) host mesh with this model-"
+                         "axis size and train under use_sharding")
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="let leftover model axis land on the sequence dim")
     ap.add_argument("--distributed", action="store_true",
                     help="multi-host: call jax.distributed.initialize()")
     args = ap.parse_args()
@@ -46,6 +54,10 @@ def main():
     data_cfg = DataConfig(
         vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch
     )
+    mesh = None
+    if args.model_parallel:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(model=args.model_parallel)
     trainer = Trainer(
         cfg,
         data_cfg,
@@ -53,7 +65,10 @@ def main():
         ckpt_dir=args.ckpt_dir,
         ckpt_every=args.ckpt_every,
         microbatches=args.microbatches,
-        compress_grads=args.compress_grads,
+        compress_grads=args.compress_grads or args.error_feedback,
+        error_feedback=args.error_feedback,
+        mesh=mesh,
+        sharding_rules={"seq": (("model",), ())} if args.seq_shard else None,
     )
     history = trainer.run(args.steps)
     print(f"final loss {history[-1]:.4f} (start {history[0]:.4f}); "

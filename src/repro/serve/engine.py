@@ -8,11 +8,13 @@ the decode_32k / long_500k cells measure.
 """
 from __future__ import annotations
 
+import contextlib
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
+from repro.dist.sharding import use_sharding
 from repro.models.registry import get_module
 
 
@@ -38,13 +40,24 @@ def make_prefill(cfg, cache_len: int):
 
 
 class ServeEngine:
-    def __init__(self, cfg, params, max_len: int = 256):
+    def __init__(self, cfg, params, max_len: int = 256, mesh=None,
+                 sharding_rules=None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.mod = get_module(cfg)
+        # mesh: trace prefill/decode under use_sharding so the models'
+        # dist.sharding hints constrain activations and the KV cache on
+        # multi-device topologies; None = single-process, hints are no-ops.
+        self.mesh = mesh
+        self.sharding_rules = sharding_rules
         self.prefill_fn = jax.jit(make_prefill(cfg, max_len))
         self.step_fn = jax.jit(make_serve_step(cfg))
+
+    def _sharding_ctx(self):
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return use_sharding(self.mesh, rules=self.sharding_rules)
 
     def generate(
         self,
@@ -55,19 +68,20 @@ class ServeEngine:
         key=None,
         frames: jax.Array | None = None,
     ):
-        if self.cfg.family == "encdec":
-            logits, cache = self.prefill_fn(self.params, frames, prompts)
-        else:
-            logits, cache = self.prefill_fn(self.params, prompts)
-        b = prompts.shape[0]
-        out = []
-        tok = self._sample(logits, temperature, key, 0)
-        pos = prompt_len
-        for i in range(max_new_tokens):
-            out.append(tok)
-            logits, cache = self.step_fn(self.params, cache, tok, jnp.int32(pos))
-            tok = self._sample(logits, temperature, key, i + 1)
-            pos += 1
+        with self._sharding_ctx():
+            if self.cfg.family == "encdec":
+                logits, cache = self.prefill_fn(self.params, frames, prompts)
+            else:
+                logits, cache = self.prefill_fn(self.params, prompts)
+            b = prompts.shape[0]
+            out = []
+            tok = self._sample(logits, temperature, key, 0)
+            pos = prompt_len
+            for i in range(max_new_tokens):
+                out.append(tok)
+                logits, cache = self.step_fn(self.params, cache, tok, jnp.int32(pos))
+                tok = self._sample(logits, temperature, key, i + 1)
+                pos += 1
         return jnp.stack(out, axis=1)  # (B, max_new_tokens)
 
     @staticmethod

@@ -48,11 +48,31 @@ def make_train_step(cfg, opt_cfg: AdamWConfig, microbatches: int = 1,
     transform = make_grad_transform(compress_grads and not error_feedback)
     pdtype = jnp.dtype(cfg.dtype)
 
+    def accumulate(params, batch):
+        """(loss, grads) over the global batch — scanned when microbatched."""
+        if microbatches == 1:
+            return grad_fn(params, batch)
+
+        def split(x):
+            return x.reshape(microbatches, x.shape[0] // microbatches, *x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+
+        def body(acc, b):
+            l, g = grad_fn(params, b)
+            acc_g, acc_l = acc
+            return (jax.tree.map(lambda a, x: a + x.astype(jnp.float32), acc_g, g),
+                    acc_l + l), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, lsum), _ = jax.lax.scan(body, (zeros, 0.0), mb)
+        return lsum / microbatches, jax.tree.map(lambda g: g / microbatches, gsum)
+
     if error_feedback:
         from repro.dist.compression import compress_tree
 
         def step_ef(params, opt_state, batch, residual):
-            loss, grads = grad_fn(params, batch)
+            loss, grads = accumulate(params, batch)
             grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
             deq, new_residual = compress_tree(grads, residual)
             params, opt_state, metrics = apply_updates(
@@ -64,24 +84,7 @@ def make_train_step(cfg, opt_cfg: AdamWConfig, microbatches: int = 1,
         return step_ef
 
     def step(params, opt_state, batch):
-        if microbatches == 1:
-            loss, grads = grad_fn(params, batch)
-        else:
-            def split(x):
-                return x.reshape(microbatches, x.shape[0] // microbatches, *x.shape[1:])
-
-            mb = jax.tree.map(split, batch)
-
-            def body(acc, b):
-                l, g = grad_fn(params, b)
-                acc_g, acc_l = acc
-                return (jax.tree.map(lambda a, x: a + x.astype(jnp.float32), acc_g, g),
-                        acc_l + l), None
-
-            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            (gsum, lsum), _ = jax.lax.scan(body, (zeros, 0.0), mb)
-            loss = lsum / microbatches
-            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+        loss, grads = accumulate(params, batch)
         params, opt_state, metrics = apply_updates(
             opt_state, grads, opt_cfg, param_dtype=pdtype, grad_transform=transform
         )

@@ -13,15 +13,18 @@ Responsibilities beyond calling the step:
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import statistics
 import time
 
 import jax
+import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, batch_at_step
+from repro.dist.sharding import use_sharding
 from repro.optim import AdamWConfig
 from .step import init_train_state, make_train_step
 
@@ -36,6 +39,9 @@ class Trainer:
         ckpt_every: int = 50,
         microbatches: int = 1,
         compress_grads: bool = False,
+        error_feedback: bool = False,
+        mesh=None,
+        sharding_rules=None,
         straggler_factor: float = 2.0,
         seed: int = 0,
     ):
@@ -47,20 +53,39 @@ class Trainer:
         self.straggler_factor = straggler_factor
         self.step_times: list[float] = []
         self.stragglers: list[int] = []
+        # mesh: activate dist.sharding hints — the step traces (and runs)
+        # under use_sharding so activation/KV constraints apply on real
+        # multi-device topologies; None keeps single-process behavior.
+        self.mesh = mesh
+        self.sharding_rules = sharding_rules
+        self.error_feedback = bool(error_feedback)  # implies compression
         self.step_fn = jax.jit(
-            make_train_step(cfg, self.opt_cfg, microbatches, compress_grads)
+            make_train_step(cfg, self.opt_cfg, microbatches,
+                            compress_grads or error_feedback,
+                            error_feedback=self.error_feedback)
         )
         self.params, self.opt_state = init_train_state(jax.random.PRNGKey(seed), cfg)
+        self.residual = (
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), self.params)
+            if self.error_feedback else None
+        )
         self.start_step = 0
         if self.ckpt is not None:
             try:
-                state, step = self.ckpt.restore(
-                    {"params": self.params, "opt": self.opt_state}
-                )
+                state, step = self.ckpt.restore(self._ckpt_tree())
                 self.params, self.opt_state = state["params"], state["opt"]
+                self.residual = state.get("residual", self.residual)
                 self.start_step = step
             except FileNotFoundError:
                 pass
+
+    def _ckpt_tree(self):
+        """Checkpointed state; the EF residual rides along so restarts stay
+        exact (dropping it would silently zero the compression carry)."""
+        tree = {"params": self.params, "opt": self.opt_state}
+        if self.error_feedback:
+            tree["residual"] = self.residual
+        return tree
 
     def _heartbeat(self, step, metrics, dt):
         if self.ckpt is None:
@@ -77,13 +102,24 @@ class Trainer:
 
     def run(self, num_steps: int, log_every: int = 10, log_fn=print):
         history = []
+        ctx = (use_sharding(self.mesh, rules=self.sharding_rules)
+               if self.mesh is not None else contextlib.nullcontext())
+        with ctx:
+            return self._run(num_steps, log_every, log_fn, history)
+
+    def _run(self, num_steps, log_every, log_fn, history):
         for step in range(self.start_step, self.start_step + num_steps):
             batch_t = batch_at_step(self.data_cfg, step)
             batch = {"tokens": batch_t[0], "labels": batch_t[1]}
             t0 = time.perf_counter()
-            self.params, self.opt_state, metrics = self.step_fn(
-                self.params, self.opt_state, batch
-            )
+            if self.error_feedback:
+                self.params, self.opt_state, metrics, self.residual = self.step_fn(
+                    self.params, self.opt_state, batch, self.residual
+                )
+            else:
+                self.params, self.opt_state, metrics = self.step_fn(
+                    self.params, self.opt_state, batch
+                )
             jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
             # straggler watchdog
@@ -100,8 +136,8 @@ class Trainer:
                     f"gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f} ms"
                 )
             if self.ckpt is not None and (step + 1) % self.ckpt_every == 0:
-                self.ckpt.save(step + 1, {"params": self.params, "opt": self.opt_state})
+                self.ckpt.save(step + 1, self._ckpt_tree())
         if self.ckpt is not None:
             self.ckpt.save(self.start_step + num_steps,
-                           {"params": self.params, "opt": self.opt_state}, blocking=True)
+                           self._ckpt_tree(), blocking=True)
         return history

@@ -1,0 +1,62 @@
+"""dist subsystem: hint context round-trip, int8 block compression bound."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.compression import compress_int8, decompress_int8
+from repro.dist.sharding import hint, logical_to_spec, tree_shardings, use_sharding
+
+
+def _mesh():
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    return jax.sharding.Mesh(devs, ("data", "model"))
+
+
+def test_hint_noop_outside_mesh():
+    x = jnp.ones((8, 4))
+    assert hint(x, ("batch", "seq")) is x
+    # varargs spelling is equivalent
+    assert hint(x, "batch", "seq") is x
+    # and even inside a trace, no context means no constraint
+    jaxpr = jax.make_jaxpr(lambda a: hint(a, ("batch", "seq")))(x)
+    assert "sharding_constraint" not in str(jaxpr)
+
+
+def test_hint_applies_spec_inside_context():
+    mesh = _mesh()
+    x = jnp.ones((8, 4))
+    with use_sharding(mesh):
+        jaxpr = jax.make_jaxpr(lambda a: hint(a, ("batch", "ff")))(x)
+        # concrete (non-tracer) values still pass through untouched
+        assert hint(x, ("batch", "ff")) is x
+    [eqn] = [e for e in jaxpr.eqns if e.primitive.name == "sharding_constraint"]
+    expect = logical_to_spec(("batch", "ff"), x.shape, mesh)
+    assert eqn.params["sharding"].spec == expect
+    assert expect == jax.sharding.PartitionSpec("data", "model")
+
+
+def test_tree_shardings_mirrors_specs():
+    mesh = _mesh()
+    structs = {
+        "w": jax.ShapeDtypeStruct((8, 4), jnp.float32),
+        "v": {"row": jax.ShapeDtypeStruct((8,), jnp.float32)},
+    }
+    specs = {"w": ("embed", "ff"), "v": {"row": ("embed",)}}
+    sh = tree_shardings(structs, specs, mesh, fsdp=True)
+    assert sh["w"].spec == jax.sharding.PartitionSpec("data", "model")
+    assert sh["v"]["row"].spec == jax.sharding.PartitionSpec("data")
+
+
+def test_compress_int8_blockwise_error_bound(key):
+    # one huge outlier per block must not poison the others' quantization
+    g = jax.random.normal(key, (4, 64)) * jnp.linspace(0.01, 100.0, 4)[:, None]
+    q, s = compress_int8(g, block=64)
+    assert q.shape == g.shape and s.shape == (4, 1)
+    deq = decompress_int8(q, s)
+    err = jnp.abs(deq - g.astype(jnp.float32)).reshape(4, 64)
+    # per-element error bounded by its own block's quantization step
+    assert bool(jnp.all(err <= s / 2 + 1e-6))
+    # per-tensor mode would smear the largest block's scale over all of them
+    q1, s1 = compress_int8(g)
+    worst = float(jnp.max(jnp.abs(decompress_int8(q1, s1) - g)[0]))
+    assert float(jnp.max(err[0])) < worst + 1e-6

@@ -5,9 +5,15 @@ figure-specific number (PetaOps, fit, rel-error...) so each row maps back to
 a paper claim. Wall-clock rows time the *JAX CPU* execution (this container);
 modeled rows come from the paper's predictive performance model and the
 TPU roofline constants.
+
+``--json BENCH_psram.json`` additionally writes the rows as a JSON list of
+``{name, us_per_call, derived}`` objects so the perf trajectory (notably the
+loop-oracle vs. vectorized-executor speedup) is machine-trackable across PRs.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -42,7 +48,11 @@ def _time(fn, *args, n=5, warmup=2):
     return (time.perf_counter() - t0) / n * 1e6  # us
 
 
+ROWS: list[dict] = []
+
+
 def row(name, us, derived):
+    ROWS.append({"name": name, "us_per_call": round(us, 1), "derived": str(derived)})
     print(f"{name},{us:.1f},{derived}")
 
 
@@ -118,6 +128,31 @@ def bench_psram_matmul():
     row("psram_matmul_ref", us, f"rel_err={rel:.4f}")
 
 
+# ------------------------------------------- tile-schedule executor (§IV)
+def bench_schedule_executor():
+    """Vectorized schedule executor vs the per-cycle loop oracle — the PR-2
+    refactor's headline speedup, on the 256x512 @ 512x128 reference matmul.
+    Both interpret the same tile program and are bit-identical."""
+    from repro.core.perf_model import measured_utilization
+    from repro.core.schedule import (
+        build_matmul_program, count_cycles, execute, execute_reference,
+    )
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 512))
+    w = jax.random.normal(jax.random.PRNGKey(1), (512, 128))
+    prog = build_matmul_program(256, 512, 128, PsramConfig())
+    us_vec = _time(execute, prog, x, w, n=5, warmup=1)
+    us_loop = _time(execute_reference, prog, x, w, n=3, warmup=1)
+    bit = bool(jnp.all(execute(prog, x, w) == execute_reference(prog, x, w)))
+    row("schedule_exec_vectorized", us_vec, f"bit_identical={bit}")
+    row("schedule_exec_loop_oracle", us_loop, "per-cycle PsramArray interpreter")
+    row("schedule_exec_speedup", 0.0, f"{us_loop / us_vec:.1f}x")
+    counts = count_cycles(prog)
+    mu = measured_utilization(prog)
+    row("schedule_exec_counted_cycles", 0.0,
+        f"{counts.compute_cycles} compute + {counts.write_cycles} write "
+        f"util={mu.utilization:.3f}")
+
+
 # --------------------------------------------------------- CP-ALS end2end
 def bench_cp_als():
     key = jax.random.PRNGKey(0)
@@ -158,16 +193,25 @@ def bench_scaling():
     row("scaling_knee_default_fabric", 0.0, f"{knee()} arrays")
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as JSON (e.g. BENCH_psram.json)")
+    args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     bench_fig5_channels()
     bench_fig5_frequency()
     bench_headline()
     bench_mttkrp_paths()
     bench_psram_matmul()
+    bench_schedule_executor()
     bench_cp_als()
     bench_energy()
     bench_scaling()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(ROWS, f, indent=2)
+        print(f"# wrote {len(ROWS)} rows to {args.json}")
 
 
 if __name__ == "__main__":

@@ -3,8 +3,9 @@ engine simulation, and the Pallas bit-plane kernel on a single matmul.
 
 Shows (1) end-to-end numerical fidelity of 8-bit photonic projections,
 (2) the Pallas kernel (interpret mode) agreeing bit-exactly with the array
-transfer function, (3) what the perf model predicts for offloading one
-decode-step's worth of projections.
+transfer function, (3) the tile-schedule executor running a projection
+bit-identically to the per-cycle array oracle, with its counted cycle /
+energy bill, (4) the schedule-derived cost of offloading one decode step.
 
 Run:  PYTHONPATH=src python examples/photonic_offload.py
 """
@@ -13,10 +14,18 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.perf_model import peak_petaops
+from repro.core.perf_model import measured_utilization, peak_petaops
 from repro.core.psram import PsramConfig
+from repro.core.schedule import (
+    build_matmul_program,
+    count_cycles,
+    execute,
+    execute_reference,
+    program_energy,
+)
 from repro.kernels.ops import psram_matmul_op
 from repro.models.registry import get_config, get_module
+from repro.serve.engine import photonic_offload_report
 
 
 def main():
@@ -42,14 +51,38 @@ def main():
     print(f"\nPallas bit-plane kernel vs array oracle: "
           f"max|diff|={float(jnp.max(jnp.abs(y_kernel - y_ref))):.2e} (bit-exact)")
 
+    # the tile-schedule executor on one projection: bit-identical to the
+    # per-cycle oracle, with the schedule's counted cycle and energy bill
+    arr = PsramConfig()
+    prog = build_matmul_program(128, 256, 128, arr)
+    y_vec = execute(prog, x, w)
+    y_loop = execute_reference(prog, x, w)
+    counts = count_cycles(prog)
+    e = program_energy(prog)
+    mu = measured_utilization(prog)
+    print(f"\nschedule executor vs per-cycle oracle: bit_identical="
+          f"{bool(jnp.all(y_vec == y_loop))}; {counts.compute_cycles} compute"
+          f" + {counts.write_cycles} write cycles ({counts.duration_s(arr)*1e9:.0f} ns"
+          f" @ {arr.frequency_ghz:.0f} GHz), {e.total_j*1e9:.1f} nJ, "
+          f"measured utilization {mu.utilization:.3f}")
+
     # what would the array sustain on these projections?
     full = get_config("granite_8b")
     proj_macs = 2 * full.param_count()  # one token through all projections
-    arr = PsramConfig()
     t_ns = proj_macs * 2 / (peak_petaops(arr) * 1e15) * 1e9
     print(f"\nperf model: one granite-8b decode step's projections "
           f"({proj_macs/1e9:.1f} GMAC) on one pSRAM array: {t_ns:.0f} ns "
           f"(@ {peak_petaops(arr):.1f} PetaOps)")
+
+    # schedule-derived bill for one decode step of the reduced model: the
+    # serve engine builds one tile program per projection and counts it
+    rep = photonic_offload_report(cfg)
+    print(f"\nserve offload report ({cfg.name}, batch 1): "
+          f"{rep['time_s']*1e6:.1f} us/step, "
+          f"{rep['energy'].total_j*1e6:.2f} uJ, "
+          f"utilization {rep['utilization'].utilization:.4f} "
+          f"(write-cycle bound at batch 1), "
+          f"projection rel_err {rep['projection_rel_err']:.4f}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
-"""Core: the paper's contribution — pSRAM array model, CP1-3 primitives,
-MTTKRP, CP-ALS, the predictive performance model, and the photonic-offload
-projection layer."""
+"""Core: the paper's contribution — pSRAM array model, the tile-schedule IR
+every photonic path lowers through, CP1-3 primitives, MTTKRP, CP-ALS, the
+predictive performance model, and the photonic-offload projection layer."""
 from .cp_als import CPState, cp_als, cp_als_psram, init_factors, reconstruct
 from .mttkrp import (
     dense_to_coo,
@@ -10,9 +10,14 @@ from .mttkrp import (
     mttkrp_dense_kr,
     mttkrp_sparse,
     mttkrp_sparse_psram,
+    mttkrp_sparse_psram_scheduled,
 )
 from .perf_model import (
+    EnergyBreakdown,
+    EnergySpec,
     MTTKRPWorkload,
+    SustainedBreakdown,
+    measured_utilization,
     peak_ops,
     peak_petaops,
     sustained_mttkrp,
@@ -24,10 +29,24 @@ from .perf_model import (
 from .photonic_layer import maybe_psram_matmul, program_weights, psram_linear
 from .psram import PsramArray, PsramConfig, matmul_via_array
 from .scaling import FabricSpec, ScalingPoint, knee, scale, sweep
+from .schedule import (
+    CycleCounts,
+    Drive,
+    StoreTile,
+    TileProgram,
+    build_matmul_program,
+    build_mttkrp_program,
+    count_cycles,
+    execute,
+    execute_reference,
+    program_energy,
+)
 from .quantization import (
     ADCConfig,
     QMAX,
     WORD_BITS,
+    adc_requantize,
+    adc_transfer,
     dequantize,
     fake_quant,
     from_bitplanes,

@@ -14,6 +14,9 @@ Paths provided (all N-mode generic):
                               chain vectorized over nonzeros.
   * ``mttkrp_sparse_psram`` — same chain through the pSRAM quantized numerics
                               (what the array would produce, §IV / Fig. 4).
+  * ``mttkrp_sparse_psram_scheduled`` — CP3 as a scatter-matmul lowered
+                              through the core.schedule tile executor, so the
+                              cycle accountant prices exactly what ran.
 The Pallas TPU kernel lives in kernels/mttkrp.py and is validated against
 ``mttkrp_dense_kr``.
 """
@@ -137,6 +140,47 @@ def mttkrp_sparse_psram(
     scaled = adc_requantize(qv * qh, adc, float(QMAX) * float(QMAX)) * (sv * sh)
     # CP 3 — exact electrical accumulation
     return jax.ops.segment_sum(scaled, indices[:, mode], num_segments=out_rows)
+
+
+def mttkrp_sparse_psram_scheduled(
+    indices: jax.Array,
+    values: jax.Array,
+    factors: tuple,
+    mode: int,
+    out_rows: int,
+    config=None,
+):
+    """COO MTTKRP lowered through the tile-schedule executor (§IV, Figs. 3-4).
+
+    CP1 gathers and Hadamard-multiplies the non-target factor rows and CP2
+    scales by the nonzero value (as in :func:`mttkrp_sparse`); CP3's
+    scatter-accumulate is then expressed as the matmul ``A = P @ D`` with
+    ``D = v·H`` the (nnz, R) scaled chain matrix stored tile-by-tile in the
+    array and ``P`` the (out_rows, nnz) one-hot scatter driven on the
+    word-lines — bit-line photocurrent summation performs the CP3 adds, and
+    post-ADC results accumulate electrically across nnz-tiles. Everything
+    lowers through ``core.schedule``, so ``count_cycles`` on the same program
+    prices exactly the cycles that ran. Materializes ``P``: intended for
+    validation and scheduling studies at test scale.
+    """
+    from .psram import PsramConfig
+    from .schedule import build_matmul_program, execute
+
+    cfg = config or PsramConfig()
+    nmodes = len(factors)
+    had = None
+    for d in range(nmodes):
+        if d == mode:
+            continue
+        rows = factors[d][indices[:, d]]
+        had = rows if had is None else had * rows           # CP 1
+    dmat = values[:, None] * had                            # CP 2: (nnz, R)
+    nnz, rank = dmat.shape
+    scatter = (
+        indices[:, mode][None, :] == jnp.arange(out_rows)[:, None]
+    ).astype(jnp.float32)                                   # (out_rows, nnz)
+    program = build_matmul_program(out_rows, nnz, rank, cfg)
+    return execute(program, scatter, dmat)                  # CP 3 on bit-lines
 
 
 def dense_to_coo(x: jax.Array) -> tuple[jax.Array, jax.Array]:

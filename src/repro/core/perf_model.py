@@ -106,6 +106,41 @@ def sustained_mttkrp(cfg: PsramConfig, wl: MTTKRPWorkload) -> SustainedBreakdown
     )
 
 
+def breakdown_from_counts(cfg: PsramConfig, counts) -> SustainedBreakdown:
+    """Build the §V utilization breakdown from counted cycles.
+
+    ``counts`` is a ``core.schedule.CycleCounts`` (possibly summed over
+    several programs) — useful when the counts are already in hand and
+    re-walking the op list would be wasteful.
+    """
+    peak = peak_petaops(cfg)
+    fill = counts.fill_utilization(cfg)
+    occ = counts.wavelength_occupancy(cfg)
+    reconf = counts.reconfig_efficiency()
+    return SustainedBreakdown(
+        peak_petaops=peak,
+        fill_utilization=fill,
+        wavelength_occupancy=occ,
+        reconfig_efficiency=reconf,
+        sustained_petaops=peak * fill * occ * reconf,
+    )
+
+
+def measured_utilization(program) -> SustainedBreakdown:
+    """Counted-cycle counterpart of :func:`sustained_mttkrp`'s breakdown.
+
+    Takes a ``core.schedule.TileProgram`` and derives the same fill /
+    wavelength-occupancy / reconfiguration terms from the accountant's
+    counted cycles instead of the closed-form §V model. The two must agree
+    on any schedule both can describe (asserted within 5% on the paper's
+    §V-A configuration in tests/test_schedule.py) — this is what validates
+    the analytical model against the executable schedule.
+    """
+    from .schedule import count_cycles
+
+    return breakdown_from_counts(program.config, count_cycles(program))
+
+
 def sweep_channels(freq_ghz: float = 20.0, channels=range(4, 53, 4)) -> list[tuple[int, float]]:
     """Fig. 5(i): sustained PetaOps vs wavelength channels at fixed frequency."""
     wl = MTTKRPWorkload()
@@ -160,6 +195,15 @@ class EnergyBreakdown:
     @property
     def total_j(self) -> float:
         return self.write_j + self.static_j + self.modulate_j + self.adc_j + self.laser_j
+
+    def __add__(self, other: "EnergyBreakdown") -> "EnergyBreakdown":
+        return EnergyBreakdown(
+            self.write_j + other.write_j,
+            self.static_j + other.static_j,
+            self.modulate_j + other.modulate_j,
+            self.adc_j + other.adc_j,
+            self.laser_j + other.laser_j,
+        )
 
 
 def mttkrp_energy(cfg: PsramConfig, wl: MTTKRPWorkload, spec: EnergySpec | None = None) -> EnergyBreakdown:

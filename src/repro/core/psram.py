@@ -149,6 +149,13 @@ class PsramArray:
             out = jnp.zeros((cfg.word_cols, cfg.wavelengths), jnp.float32)
             return out.at[:, channel_of_row].set(vals.T)
 
+        if not isinstance(channel_of_row, jax.core.Tracer):
+            chans = np.asarray(channel_of_row)
+            if chans.size and (chans.min() < 0 or chans.max() >= cfg.wavelengths):
+                raise ValueError(
+                    "channel_of_row entries must lie in "
+                    f"[0, {cfg.wavelengths}), got {chans}"
+                )
         qx, sx = quantize_symmetric(intensities)
         qx = qx.astype(jnp.int32)  # (rows,)
         # per-bit optical product, bit-significance scaling at output encoder
@@ -165,38 +172,21 @@ class PsramArray:
 def matmul_via_array(x: jax.Array, w: jax.Array, config: PsramConfig | None = None) -> jax.Array:
     """Compute ``x @ w`` by tiling it over pSRAM array cycles.
 
-    x: (M, K) float, w: (K, N) float. Each cycle programs a (rows=K-tile,
-    word_cols=N-tile) block and drives one row of x per wavelength... in the
-    dense-matmul mapping all rows share wavelength 0 (the bit-line must sum
-    over K), so WDM instead batches M: up to ``wavelengths`` rows of x are
-    issued per optical cycle on distinct channels — hyperspectral batching.
+    x: (M, K) float, w: (K, N) float. The schedule (core.schedule): each
+    K-tile x N-tile weight block is programmed once, then up to
+    ``wavelengths`` rows of x ride the array per optical cycle on distinct
+    channels — hyperspectral batching of M (§IV-A).
 
-    This is the slow, physically-faithful path used as an oracle; the fast
-    TPU path is kernels/psram_matmul.py.
+    Thin wrapper: builds the tile program and runs the vectorized executor,
+    which is bit-identical to the per-cycle ``schedule.execute_reference``
+    oracle (asserted in tests/test_schedule.py).
     """
+    from .schedule import build_matmul_program, execute
+
     cfg = config or PsramConfig()
-    cfg.validate()
     M, K = x.shape
     K2, N = w.shape
     assert K == K2
-    out = np.zeros((M, N), dtype=np.float32)
-    arr = PsramArray(cfg)
-    for k0 in range(0, K, cfg.rows):
-        k1 = min(k0 + cfg.rows, K)
-        for n0 in range(0, N, cfg.word_cols):
-            n1 = min(n0 + cfg.word_cols, N)
-            tile = arr.store(w[k0:k1, n0:n1])
-            for m0 in range(0, M, cfg.wavelengths):
-                m1 = min(m0 + cfg.wavelengths, M)
-                # issue up to `wavelengths` input vectors in ONE optical
-                # cycle, vector i on channel i (hyperspectral batching); the
-                # result comes back off the wavelength axis.
-                xt = (
-                    jnp.zeros((m1 - m0, cfg.rows))
-                    .at[:, : k1 - k0]
-                    .set(x[m0:m1, k0:k1])
-                )
-                chan = jnp.arange(m1 - m0, dtype=jnp.int32)
-                acc = tile.multiply_accumulate(xt, chan)  # (cols, wavelengths)
-                out[m0:m1, n0:n1] += np.asarray(acc[: n1 - n0, : m1 - m0].T)
-    return jnp.asarray(out)
+    if M == 0 or K == 0 or N == 0:
+        return jnp.zeros((M, N), dtype=jnp.float32)
+    return execute(build_matmul_program(M, K, N, cfg), x, w)

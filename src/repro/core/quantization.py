@@ -83,6 +83,27 @@ def from_bitplanes(sign: jax.Array, planes: jax.Array) -> jax.Array:
     return (sign.astype(jnp.int32) * mag).astype(jnp.int8)
 
 
+def adc_transfer(
+    acc: jax.Array, levels: int, full_scale: jax.Array | float, saturate: bool = True
+) -> jax.Array:
+    """The ADC transfer curve (§III-C) as a plain jnp function.
+
+    Mid-rise uniform quantization onto ``levels`` codes across
+    [-full_scale, +full_scale], optionally clipped at the rails. This is THE
+    one implementation of the curve: :func:`adc_requantize` wraps it for
+    :class:`ADCConfig` callers and the Pallas kernel epilogue
+    (kernels/psram_matmul.py) calls it directly inside the kernel — both are
+    asserted bit-for-bit equal in tests.
+    """
+    acc = acc.astype(jnp.float32)
+    lsb = 2.0 * full_scale / levels
+    code = jnp.round(acc / lsb)
+    if saturate:
+        half = levels // 2
+        code = jnp.clip(code, -(half - 1), half - 1)
+    return code * lsb
+
+
 def adc_requantize(acc: jax.Array, adc: ADCConfig, full_scale: jax.Array | float) -> jax.Array:
     """Digitize an integer/analog accumulation through the ADC transfer curve.
 
@@ -90,13 +111,7 @@ def adc_requantize(acc: jax.Array, adc: ADCConfig, full_scale: jax.Array | float
     photocurrent). Values are mapped onto ``2**bits`` uniform levels across
     [-full_scale, +full_scale] (mid-rise), optionally clipped.
     """
-    acc = acc.astype(jnp.float32)
-    lsb = 2.0 * full_scale / adc.levels
-    code = jnp.round(acc / lsb)
-    if adc.saturate:
-        half = adc.levels // 2
-        code = jnp.clip(code, -(half - 1), half - 1)
-    return code * lsb
+    return adc_transfer(acc, adc.levels, full_scale, adc.saturate)
 
 
 def fake_quant(x: jax.Array, axis=None) -> jax.Array:

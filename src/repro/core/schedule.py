@@ -1,0 +1,393 @@
+"""Tile-schedule IR for the pSRAM engine — the layer every path lowers through.
+
+The paper's 17-PetaOps headline (§V) is a property of a *schedule*, not of a
+single MAC: operand tiles are written into the 256x32 array (one word-line per
+20 GHz write cycle), driven for a reuse window over up to 52 WDM channels
+(§IV's CP mapping, Figs. 3-4), then rewritten. This module makes that
+schedule a first-class object — a small tile program of :class:`StoreTile`
+and :class:`Drive` ops with explicit cycle costs — and provides two
+interpreters plus an accountant over it:
+
+* :func:`execute` — the **vectorized JAX executor**: pads the operands into
+  tile stacks, runs every tile's optical cycle as one batched exact
+  contraction, and folds k-tiles in schedule order so the result is
+  *bit-identical* to the per-cycle reference below (and ~20x faster).
+* :func:`execute_reference` — the **per-cycle oracle**: walks the program op
+  by op, programming a :class:`~repro.core.psram.PsramArray` on every
+  ``StoreTile`` and issuing one ``multiply_accumulate`` per ``Drive`` — the
+  array physics of §III/§IV, slow but transparently faithful.
+* :func:`count_cycles` / :func:`program_energy` — the **accountant**: counts
+  compute vs. write cycles, channel- and live-word-occupancy, and maps them
+  onto :class:`~repro.core.perf_model.EnergySpec` device energies.
+
+How the layers relate: ``core.psram`` holds only array physics (what one
+optical cycle does); this module holds the schedule (which cycles happen, in
+what order, at what cost); ``kernels/psram_matmul.py`` is the fast Pallas
+lowering of the same transfer function (§III-C ADC epilogue shared via
+``core.quantization.adc_transfer``); ``core.perf_model`` is the closed-form
+model of §V whose ``sustained_mttkrp`` breakdown (fill x wavelength occupancy
+x reconfiguration efficiency) is validated against :func:`count_cycles` via
+``perf_model.measured_utilization`` — the analytical and the counted numbers
+come from the same schedule, so they must agree (tests/test_schedule.py).
+
+Paper map: ``build_matmul_program`` / ``execute`` implement the §IV mapping
+(weights stationary, inputs WDM-batched over wavelengths); ``count_cycles``
+and ``build_mttkrp_program`` implement the §V predictive model's schedule;
+``program_energy`` extends it with the §III-B device energies.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .psram import PsramArray, PsramConfig
+from .quantization import ADCConfig, QMAX, adc_requantize, quantize_symmetric
+
+
+# ---------------------------------------------------------------------------
+# IR
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StoreTile:
+    """Program one weight tile into the array.
+
+    Costs ``rows_written`` write cycles (one word-line latch per cycle at the
+    20 GHz clock, §III-B). ``live_words`` is how many of the array's words
+    hold live operands afterwards — the fill term of §V's utilization.
+    ``(k0, k1, n0, n1)`` is the stored slice of the weight operand; programs
+    built for accounting only (paper-scale MTTKRP) keep the default geometry.
+    """
+
+    rows_written: int
+    live_words: int
+    k0: int = 0
+    k1: int = 0
+    n0: int = 0
+    n1: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Drive:
+    """Issue ``cycles`` identical optical cycles against the stored tile.
+
+    Each cycle occupies ``channels`` WDM channels and retires
+    ``channels * live_words`` MACs (every live word MACs once per channel per
+    cycle, §IV-A). ``(m0, m1)`` is the slice of drive vectors for executable
+    matmul programs — one vector per channel, hyperspectral batching.
+    """
+
+    cycles: int
+    channels: int
+    live_words: int
+    m0: int = 0
+    m1: int = 0
+
+    @property
+    def macs(self) -> int:
+        return self.cycles * self.channels * self.live_words
+
+
+@dataclasses.dataclass(frozen=True)
+class TileProgram:
+    """A schedule: ops in issue order, repeated ``repeats`` times.
+
+    ``shape`` is ``(M, K, N)`` for executable matmul programs (None for
+    accounting-only programs, which :func:`execute` rejects).
+    """
+
+    config: PsramConfig
+    ops: tuple
+    repeats: int = 1
+    shape: tuple[int, int, int] | None = None
+
+    @property
+    def executable(self) -> bool:
+        return self.shape is not None and self.repeats == 1
+
+
+def build_matmul_program(m: int, k: int, n: int, config: PsramConfig | None = None) -> TileProgram:
+    """Schedule ``(M,K) @ (K,N)`` over array cycles — the §IV dense mapping.
+
+    Loop nest (weights stationary, §IV-A): for each (K-tile, N-tile) the
+    weight block is written once, then up to ``wavelengths`` rows of the
+    input ride the array per optical cycle on distinct channels.
+    """
+    cfg = config or PsramConfig()
+    cfg.validate()
+    if m < 1 or k < 1 or n < 1:
+        raise ValueError(f"degenerate matmul {m}x{k}x{n}")
+    ops = []
+    for k0 in range(0, k, cfg.rows):
+        k1 = min(k0 + cfg.rows, k)
+        for n0 in range(0, n, cfg.word_cols):
+            n1 = min(n0 + cfg.word_cols, n)
+            live = (k1 - k0) * (n1 - n0)
+            ops.append(StoreTile(rows_written=k1 - k0, live_words=live,
+                                 k0=k0, k1=k1, n0=n0, n1=n1))
+            for m0 in range(0, m, cfg.wavelengths):
+                m1 = min(m0 + cfg.wavelengths, m)
+                ops.append(Drive(cycles=1, channels=m1 - m0, live_words=live,
+                                 m0=m0, m1=m1))
+    return TileProgram(config=cfg, ops=tuple(ops), shape=(m, k, n))
+
+
+def build_mttkrp_program(cfg: PsramConfig, wl) -> TileProgram:
+    """Schedule the paper's §V MTTKRP mapping, for accounting.
+
+    One tile window (Figs. 3-4): factor rows interleave down the columns —
+    ``floor(rows/R)`` rank-R segments pack per column (§V's fill term); the
+    tile is reused for ``k // wavelengths`` optical cycles before the next
+    rewrite (§V's reconfiguration term); each cycle occupies one channel per
+    pending (j,k) chain (§V's occupancy term). The window repeats until all
+    ``wl.macs`` MACs are retired. ``wl`` is a
+    :class:`~repro.core.perf_model.MTTKRPWorkload`.
+    """
+    cfg.validate()
+    rank_rows = min(wl.rank, cfg.rows)
+    packed = max(1, cfg.rows // rank_rows)
+    live = packed * rank_rows * cfg.word_cols
+    reuse = max(1, wl.k // cfg.wavelengths)
+    pending = max(1, wl.nonzeros // max(1, wl.i))
+    channels = min(cfg.wavelengths, pending)
+    window = (
+        StoreTile(rows_written=cfg.rows, live_words=live),
+        Drive(cycles=reuse, channels=channels, live_words=live),
+    )
+    macs_per_window = window[1].macs
+    windows = max(1, -(-wl.macs // macs_per_window))  # ceil
+    return TileProgram(config=cfg, ops=window, repeats=windows)
+
+
+# ---------------------------------------------------------------------------
+# accountant
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CycleCounts:
+    """Counted resources of a program, in units of the array clock."""
+
+    write_cycles: int
+    compute_cycles: int
+    macs: int
+    channel_cycles: int    # sum over compute cycles of channels occupied
+    live_word_cycles: int  # sum over compute cycles of live words MACing
+    stores: int
+
+    @property
+    def total_cycles(self) -> int:
+        return self.write_cycles + self.compute_cycles
+
+    def __add__(self, other: "CycleCounts") -> "CycleCounts":
+        return CycleCounts(
+            self.write_cycles + other.write_cycles,
+            self.compute_cycles + other.compute_cycles,
+            self.macs + other.macs,
+            self.channel_cycles + other.channel_cycles,
+            self.live_word_cycles + other.live_word_cycles,
+            self.stores + other.stores,
+        )
+
+    def reconfig_efficiency(self) -> float:
+        return self.compute_cycles / max(1, self.total_cycles)
+
+    def wavelength_occupancy(self, cfg: PsramConfig) -> float:
+        return self.channel_cycles / max(1, cfg.wavelengths * self.compute_cycles)
+
+    def fill_utilization(self, cfg: PsramConfig) -> float:
+        return self.live_word_cycles / max(1, cfg.words * self.compute_cycles)
+
+    def utilization(self, cfg: PsramConfig) -> float:
+        """MACs retired / MACs the array could retire in the counted time."""
+        return self.macs / max(1, cfg.words * cfg.wavelengths * self.total_cycles)
+
+    def duration_s(self, cfg: PsramConfig) -> float:
+        return self.total_cycles / (cfg.frequency_ghz * 1e9)
+
+
+def count_cycles(program: TileProgram) -> CycleCounts:
+    """Walk the program and count compute vs. write cycles and occupancies."""
+    write = compute = macs = chan_cyc = live_cyc = stores = 0
+    for op in program.ops:
+        if isinstance(op, StoreTile):
+            write += op.rows_written
+            stores += 1
+        elif isinstance(op, Drive):
+            compute += op.cycles
+            macs += op.macs
+            chan_cyc += op.cycles * op.channels
+            live_cyc += op.cycles * op.live_words
+        else:
+            raise TypeError(f"unknown op {op!r}")
+    r = program.repeats
+    return CycleCounts(write * r, compute * r, macs * r,
+                       chan_cyc * r, live_cyc * r, stores * r)
+
+
+def program_energy(program: TileProgram, spec=None):
+    """Map counted cycles onto per-device energies (§III-B) — feeds EnergySpec.
+
+    Write energy charges every latched bit; static power and the laser run
+    for the program's full duration (compute + write cycles); modulation
+    charges 8 bits per word-line per occupied channel-cycle; the ADC converts
+    one (column, wavelength) accumulation per occupied channel-cycle.
+    """
+    from .perf_model import EnergyBreakdown, EnergySpec
+    spec = spec or EnergySpec()
+    cfg = program.config
+    counts = count_cycles(program)
+    t = counts.duration_s(cfg)
+    write_j = counts.write_cycles * cfg.bits_per_row * spec.write_pj_per_bit * 1e-12
+    static_j = cfg.rows * cfg.bits_per_row * spec.static_aj_per_bit * 1e-18 \
+        * counts.total_cycles
+    modulate_j = counts.channel_cycles * cfg.rows * 8 * spec.modulator_fj_per_bit * 1e-15
+    adc_j = counts.channel_cycles * cfg.word_cols * spec.adc_pj_per_conversion * 1e-12
+    laser_j = spec.laser_wall_w * t
+    return EnergyBreakdown(write_j, static_j, modulate_j, adc_j, laser_j)
+
+
+# ---------------------------------------------------------------------------
+# reference interpreter — per-cycle array physics
+# ---------------------------------------------------------------------------
+
+def execute_reference(program: TileProgram, x: jax.Array, w: jax.Array) -> jax.Array:
+    """Interpret the program op by op through :class:`PsramArray`.
+
+    This is the pre-IR loop oracle of ``matmul_via_array``: every StoreTile
+    programs the array, every Drive issues one WDM-batched optical cycle.
+    Slow (one eager dispatch per op) but each step is §III physics; the
+    vectorized :func:`execute` is asserted bit-identical to this.
+    """
+    _require_executable(program)
+    import numpy as np
+
+    cfg = program.config
+    m, k, n = program.shape
+    assert x.shape == (m, k) and w.shape == (k, n), (x.shape, w.shape, program.shape)
+    out = np.zeros((m, n), dtype=np.float32)
+    arr = PsramArray(cfg)
+    tile = None
+    cur = None
+    for op in program.ops:
+        if isinstance(op, StoreTile):
+            cur = op
+            tile = arr.store(w[op.k0:op.k1, op.n0:op.n1])
+        else:
+            xt = (
+                jnp.zeros((op.m1 - op.m0, cfg.rows))
+                .at[:, : cur.k1 - cur.k0]
+                .set(x[op.m0:op.m1, cur.k0:cur.k1])
+            )
+            chan = jnp.arange(op.m1 - op.m0, dtype=jnp.int32)
+            acc = tile.multiply_accumulate(xt, chan)  # (cols, wavelengths)
+            out[op.m0:op.m1, cur.n0:cur.n1] += np.asarray(
+                acc[: cur.n1 - cur.n0, : op.m1 - op.m0].T
+            )
+    return jnp.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# vectorized executor
+# ---------------------------------------------------------------------------
+
+def _require_executable(program: TileProgram) -> None:
+    if program.shape is None:
+        raise ValueError("program carries no matmul geometry (accounting-only)")
+    if program.repeats != 1:
+        raise ValueError(
+            f"program has repeats={program.repeats}; only single-pass programs "
+            "are executable (repeated programs are for accounting)"
+        )
+
+
+def _validate_matmul_program(program: TileProgram) -> None:
+    """Verify the ops ARE the canonical store/drive nest, geometry included.
+
+    The vectorized lowering computes the canonical schedule for
+    ``program.shape``; a reordered or re-sliced op sequence must raise here
+    rather than silently executing a schedule the program doesn't describe
+    (``execute_reference`` would honor the actual ops and disagree).
+    """
+    m, k, n = program.shape
+    expected = build_matmul_program(m, k, n, program.config).ops
+    if program.ops != expected:
+        raise ValueError(
+            f"non-canonical matmul program for shape {program.shape}: op "
+            "sequence differs from the canonical store/drive nest — use "
+            "execute_reference for custom schedules"
+        )
+
+
+def _execute_tiles(x, w, *, rows, cols, wav, kt, nt, mt, adc_bits, saturate):
+    """All tile cycles of the canonical matmul schedule, batched.
+
+    Numerics mirror ``PsramArray.store`` + the WDM-batched
+    ``multiply_accumulate`` exactly: per-tile per-column weight scales,
+    per-drive-vector intensity scales, the shared ADC transfer at the array's
+    fixed full scale, and a K-tile fold so float accumulation happens in the
+    same order as the per-cycle reference.
+
+    Deliberately NOT wrapped in jax.jit: whole-program fusion lets XLA
+    contract the dequant multiply chain and drift the result by 1 ulp from
+    the eager reference interpreter. Eager execution keeps every float op
+    bit-identical; the speedup comes from batching all tiles into a handful
+    of large ops (the int32 contraction dominates and is exact either way).
+    """
+    m, k = x.shape
+    n = w.shape[1]
+    xp = jnp.pad(x.astype(jnp.float32), ((0, mt * wav - m), (0, kt * rows - k)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, kt * rows - k), (0, nt * cols - n)))
+    # stacked StoreTiles: quantize each (rows, cols) tile per column, exactly
+    # as store() does (the bit-plane round trip is the identity on int8)
+    wt = wp.reshape(kt, rows, nt, cols).transpose(0, 2, 1, 3)   # (kt,nt,rows,cols)
+    qw, sw = quantize_symmetric(wt, axis=2)                     # sw (kt,nt,1,cols)
+    # stacked Drives: quantize each chunk's vectors per row over the K-tile
+    xt = xp.reshape(mt, wav, kt, rows).transpose(0, 2, 1, 3)    # (mt,kt,wav,rows)
+    qx, sx = quantize_symmetric(xt, axis=3)                     # sx (mt,kt,wav,1)
+    # One optical cycle per (m-chunk, k-tile, n-tile): exact bit-line sums.
+    # Every partial sum is an integer bounded by QMAX^2 * rows, so when that
+    # fits float32's 2^24 integer range the contraction runs exactly on the
+    # fast f32 BLAS path; larger arrays fall back to exact int32.
+    exact_f32 = float(QMAX) * float(QMAX) * rows < 2 ** 24
+    ctype = jnp.float32 if exact_f32 else jnp.int32
+    lhs = qx.astype(ctype).transpose(1, 0, 2, 3).reshape(kt, mt * wav, rows)
+    rhs = qw.astype(ctype).transpose(0, 2, 1, 3).reshape(kt, rows, nt * cols)
+    acc = jax.lax.dot_general(
+        lhs, rhs, (((2,), (1,)), ((0,), (0,))), preferred_element_type=ctype
+    )  # (kt, mt*wav, nt*cols)
+    acc = acc.reshape(kt, mt, wav, nt, cols).transpose(0, 1, 3, 2, 4)
+    full_scale = float(QMAX) * float(QMAX) * rows
+    acc = adc_requantize(acc, ADCConfig(bits=adc_bits, saturate=saturate), full_scale)
+    sxb = sx.transpose(1, 0, 2, 3)[:, :, None]      # (kt,mt,1,wav,1)
+    swb = sw[:, None]                               # (kt,1,nt,1,cols)
+    vals = acc * (sxb * swb)                        # (kt,mt,nt,wav,cols)
+    # electrical accumulation across K-tiles, folded in schedule order so the
+    # float adds happen in the same sequence as the reference's `out +=`
+    out = vals[0]
+    for i in range(1, kt):
+        out = out + vals[i]
+    return out.transpose(0, 2, 1, 3).reshape(mt * wav, nt * cols)[:m, :n]
+
+
+def execute(program: TileProgram, x: jax.Array, w: jax.Array) -> jax.Array:
+    """Run an executable matmul program on the vectorized JAX executor.
+
+    Bit-identical to :func:`execute_reference` on every shape (golden and
+    property tests in tests/test_schedule.py) and >20x faster: one batched
+    contraction over the pre-padded tile stacks instead of a store and a
+    drive dispatch per tile.
+    """
+    _require_executable(program)
+    _validate_matmul_program(program)
+    cfg = program.config
+    m, k, n = program.shape
+    if x.shape != (m, k) or w.shape != (k, n):
+        raise ValueError(f"operands {x.shape}@{w.shape} don't match program {program.shape}")
+    return _execute_tiles(
+        x, w,
+        rows=cfg.rows, cols=cfg.word_cols, wav=cfg.wavelengths,
+        kt=-(-k // cfg.rows), nt=-(-n // cfg.word_cols), mt=-(-m // cfg.wavelengths),
+        adc_bits=cfg.adc.bits, saturate=cfg.adc.saturate,
+    )

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.quantization import QMAX
+from repro.core.quantization import QMAX, adc_transfer
 
 
 def _kernel(qx_ref, qw_ref, sx_ref, sw_ref, out_ref, acc_ref, *, nk: int, adc_bits: int, k_total: int):
@@ -38,15 +38,10 @@ def _kernel(qx_ref, qw_ref, sx_ref, sw_ref, out_ref, acc_ref, *, nk: int, adc_bi
 
     @pl.when(kk == nk - 1)
     def _epilogue():
-        acc = acc_ref[...].astype(jnp.float32)
-        # ADC transfer curve (mid-rise, saturating) — §III-C
+        # ADC transfer curve (mid-rise, saturating) — §III-C; shared with
+        # every non-kernel path via core.quantization
         full_scale = float(QMAX) * float(QMAX) * k_total
-        levels = 2 ** adc_bits
-        lsb = 2.0 * full_scale / levels
-        code = jnp.round(acc / lsb)
-        half = levels // 2
-        code = jnp.clip(code, -(half - 1), half - 1)
-        analog = code * lsb
+        analog = adc_transfer(acc_ref[...], 2 ** adc_bits, full_scale)
         out_ref[...] = analog * (sx_ref[...] * sw_ref[...])
 
 

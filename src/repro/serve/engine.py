@@ -5,10 +5,17 @@ prompts, one prefill, then jit'd decode steps with greedy or temperature
 sampling. `make_serve_step` builds the bare decode step the dry-run lowers
 (one new token against a seq_len cache) — that is the function whose roofline
 the decode_32k / long_500k cells measure.
+
+`photonic_offload_report` prices offloading one decode step's projections
+onto the pSRAM engine by lowering each projection through the core.schedule
+tile IR: counted compute/write cycles, measured utilization, and §III-B
+energies — the serving-side consumer of the schedule accountant.
 """
 from __future__ import annotations
 
 import contextlib
+import dataclasses
+from collections import Counter
 from functools import partial
 
 import jax
@@ -16,6 +23,106 @@ import jax.numpy as jnp
 
 from repro.dist.sharding import use_sharding
 from repro.models.registry import get_module
+
+
+def _decode_projection_shapes(cfg, batch: int) -> list[tuple[int, int, int]]:
+    """The dominant projection matmuls one decode step issues.
+
+    Non-encdec families derive the per-layer mixer/MLP placement from
+    ``models.blocks.group_layout`` — the same layout the model actually
+    builds — so MoE layers are billed at the *active* expert width
+    (top_k x d_ff_expert) exactly where the router runs and SSM layers bill
+    their in/out projections instead of qkv. Approximation boundaries:
+    router/conv/norm matvecs and the SSM state update are excluded (they are
+    not §IV array-shaped matmuls); encoder layers never run at decode, and
+    cross-attention reuses cached encoder k/v (only its q and output
+    projections are billed).
+    """
+    from repro.models.blocks import group_layout
+
+    gated = 2 if cfg.act in ("swiglu", "geglu") else 1
+    attn = [
+        (batch, cfg.d_model, cfg.q_dim + 2 * cfg.kv_dim),        # fused qkv
+        (batch, cfg.q_dim, cfg.d_model),                         # output proj
+    ]
+    cross_attn = [
+        (batch, cfg.d_model, cfg.q_dim),                         # q only
+        (batch, cfg.q_dim, cfg.d_model),
+    ]
+
+    def mlp(ff):
+        return [(batch, cfg.d_model, ff * gated), (batch, ff, cfg.d_model)]
+
+    moe_ff = max(1, cfg.top_k) * (cfg.d_ff_expert or cfg.d_ff)
+    d_in = cfg.d_inner_resolved
+    ssm = [(batch, cfg.d_model, 2 * d_in), (batch, d_in, cfg.d_model)]
+
+    shapes: list[tuple[int, int, int]] = []
+    if cfg.family == "encdec":
+        for _ in range(cfg.dec_layers or cfg.num_layers):
+            shapes += attn + cross_attn + mlp(cfg.d_ff)
+    else:
+        for _ in range(cfg.num_groups):
+            for desc in group_layout(cfg):
+                shapes += attn if desc.mixer == "attn" else ssm
+                if desc.mlp == "moe":
+                    shapes += mlp(moe_ff)
+                elif desc.mlp == "dense":
+                    shapes += mlp(cfg.d_ff)
+    shapes.append((batch, cfg.d_model, cfg.padded_vocab))            # unembed
+    return shapes
+
+
+def photonic_offload_report(cfg, batch: int = 1, psram_config=None, fidelity: bool = True):
+    """Schedule-derived cost of one decode step's projections on the array.
+
+    Builds the §IV tile program for each projection matmul the decode step
+    issues (family-aware: see :func:`_decode_projection_shapes`), runs them
+    through the counted-cycle accountant, and prices them with the §III-B
+    device energies. With ``fidelity=True`` one representative projection is
+    actually executed on the vectorized executor to report the end-to-end
+    relative error of the 8-bit + ADC transfer function.
+
+    Returns a dict: cycles (CycleCounts), time_s, utilization
+    (SustainedBreakdown from counted cycles), energy (EnergyBreakdown),
+    projection_rel_err (float | None).
+    """
+    from repro.core.perf_model import breakdown_from_counts
+    from repro.core.psram import PsramConfig
+    from repro.core.schedule import (
+        build_matmul_program,
+        count_cycles,
+        execute,
+        program_energy,
+    )
+
+    arr = psram_config or PsramConfig()
+    shapes = _decode_projection_shapes(cfg, batch)
+    # layers repeat the same few shapes — account each unique program once
+    # with the IR's repeats field instead of rebuilding its op list per layer
+    programs = [
+        dataclasses.replace(build_matmul_program(m, k, n, arr), repeats=times)
+        for (m, k, n), times in Counter(shapes).items()
+    ]
+    counts = sum((count_cycles(p) for p in programs[1:]),
+                 count_cycles(programs[0]))
+    energy = sum((program_energy(p) for p in programs[1:]),
+                 program_energy(programs[0]))
+    rel_err = None
+    if fidelity:
+        m, k, n = shapes[0]
+        x = jax.random.normal(jax.random.PRNGKey(0), (m, k))
+        w = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+        got = execute(build_matmul_program(m, k, n, arr), x, w)
+        exact = x @ w
+        rel_err = float(jnp.linalg.norm(got - exact) / jnp.linalg.norm(exact))
+    return {
+        "cycles": counts,
+        "time_s": counts.duration_s(arr),
+        "utilization": breakdown_from_counts(arr, counts),
+        "energy": energy,
+        "projection_rel_err": rel_err,
+    }
 
 
 def make_serve_step(cfg):
@@ -83,6 +190,15 @@ class ServeEngine:
                 tok = self._sample(logits, temperature, key, i + 1)
                 pos += 1
         return jnp.stack(out, axis=1)  # (B, max_new_tokens)
+
+    def photonic_offload_report(self, batch: int | None = None, psram_config=None,
+                                fidelity: bool = True):
+        """What offloading this engine's decode projections would cost on the
+        pSRAM array — see module-level :func:`photonic_offload_report`."""
+        return photonic_offload_report(
+            self.cfg, batch=1 if batch is None else batch,
+            psram_config=psram_config, fidelity=fidelity,
+        )
 
     @staticmethod
     def _sample(logits, temperature, key, i):

@@ -44,6 +44,33 @@ def test_psram_matmul_adc_sweep(key, adc_bits):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
 
 
+@pytest.mark.parametrize("adc_bits", [8, 12, 16])
+def test_kernel_epilogue_adc_bit_for_bit(key, adc_bits):
+    """The kernel's ADC epilogue and core adc_requantize are ONE curve.
+
+    The Pallas epilogue calls core.quantization.adc_transfer; this pins the
+    helper to adc_requantize bit-for-bit on raw int32 accumulations, and the
+    full kernel to the oracle (which goes through adc_requantize) exactly —
+    a reintroduced inline reimplementation shows up as a 1-ulp drift here.
+    """
+    from repro.core.quantization import ADCConfig, adc_requantize, adc_transfer
+    acc = jax.random.randint(key, (256,), -2_000_000, 2_000_000).astype(jnp.int32)
+    full_scale = 127.0 * 127.0 * 128
+    got = adc_transfer(acc, 2 ** adc_bits, full_scale)
+    want = adc_requantize(acc, ADCConfig(bits=adc_bits), full_scale)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    x = jax.random.normal(key, (64, 128))
+    w = jax.random.normal(jax.random.PRNGKey(7), (128, 64))
+    qx, sx = quantize_symmetric(x, axis=-1)
+    qw, sw = quantize_symmetric(w, axis=0)
+    kern = psram_matmul(qx, qw, sx.reshape(-1, 1), sw.reshape(1, -1),
+                        bm=64, bn=64, bk=64, adc_bits=adc_bits, interpret=True)
+    oracle = ref.psram_matmul_ref(qx, qw, sx.reshape(-1, 1), sw.reshape(1, -1),
+                                  adc_bits=adc_bits)
+    np.testing.assert_array_equal(np.asarray(kern), np.asarray(oracle))
+
+
 # ---------------- fused MTTKRP ----------------
 
 @pytest.mark.parametrize("i,j,k,r,bi,bk", [

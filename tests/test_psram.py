@@ -46,6 +46,24 @@ def test_wavelength_separation(key):
     np.testing.assert_allclose(float(summed[0, 0]), 10.0, rtol=0.02)
 
 
+def test_per_row_channel_out_of_range_raises(key):
+    """1-D drive: out-of-range channels must raise, not silently vanish.
+
+    Before the fix the one-hot segment sum just dropped rows whose channel
+    fell outside [0, wavelengths) — the photocurrent disappeared without a
+    trace. The WDM-batched path already validated; now both do."""
+    cfg = PsramConfig(rows=4, word_cols=2, wavelengths=2)
+    arr = PsramArray(cfg).store(jnp.ones((4, 2)))
+    x = jnp.array([1.0, 2.0, 3.0, 4.0])
+    with pytest.raises(ValueError):
+        arr.multiply_accumulate(x, jnp.array([0, 1, 2, 3], jnp.int32))  # 2,3 invalid
+    with pytest.raises(ValueError):
+        arr.multiply_accumulate(x, jnp.array([-1, 0, 1, 1], jnp.int32))
+    # in-range still works and loses nothing
+    out = arr.multiply_accumulate(x, jnp.array([0, 1, 0, 1], jnp.int32))
+    np.testing.assert_allclose(float(out[0].sum()), 10.0, rtol=0.02)
+
+
 def test_matmul_via_array_matches(key):
     x = jax.random.normal(key, (3, 20))
     w = jax.random.normal(jax.random.PRNGKey(1), (20, 5))

@@ -182,6 +182,57 @@ def bench_energy():
     row("energy_advantage", 0.0, f"{ops_per_joule(cfg, wl)/tpu_ops_per_joule(wl):.0f}x")
 
 
+# ------------------------------------------ sparse MTTKRP density sweep
+def bench_sparse_mttkrp(smoke: bool = False):
+    """Streamed sparse MTTKRP (repro.sparse) across densities: wall-clock of
+    the streaming executor (bit-identical to the COO segment-sum path),
+    counted-cycle utilization of its schedule, and agreement with the
+    sparse-aware analytical model — the paper's actual workload class."""
+    from repro.core.perf_model import (
+        SparseMTTKRPWorkload, measured_utilization, sustained_mttkrp,
+    )
+    from repro.core.schedule import count_cycles
+    from repro.sparse import (
+        build_stream_program, csf_for_mode, powerlaw_coo, stream_mttkrp,
+    )
+
+    cfg = PsramConfig()
+    shape = (400, 300, 200) if smoke else (2000, 1500, 1200)
+    size = shape[0] * shape[1] * shape[2]
+    densities = (1e-4, 1e-3) if smoke else (1e-5, 1e-4, 1e-3)
+    rank = 32
+    for dens in densities:
+        nnz = max(1000, int(size * dens))
+        coo = powerlaw_coo(jax.random.PRNGKey(0), shape, nnz=nnz,
+                           rank=8, alpha=1.1)
+        csf = csf_for_mode(coo, 0)
+        fs = tuple(
+            jax.random.normal(jax.random.PRNGKey(d + 1), (s, rank))
+            for d, s in enumerate(shape)
+        )
+        us = _time(lambda: stream_mttkrp(csf, fs, cfg), n=3, warmup=1)
+        s = csf.to_coo()
+        exact = mttkrp_sparse(s.indices, s.values, fs, 0, shape[0])
+        bit = bool(jnp.all(stream_mttkrp(csf, fs, cfg) == exact))
+        prog = build_stream_program(csf.fiber_lengths(), rank, cfg)
+        counts = count_cycles(prog)
+        measured = measured_utilization(prog)
+        model = sustained_mttkrp(cfg, SparseMTTKRPWorkload(
+            fiber_lengths=csf.fiber_lengths(), rank=rank))
+        agree = measured.utilization / max(model.utilization, 1e-30)
+        row(f"sparse_mttkrp_d{dens:g}_nnz{coo.nnz}", us,
+            f"bit_identical={bit} cycles={counts.total_cycles} "
+            f"util={measured.utilization:.4f} model_agree={agree:.3f}")
+    # modeled §V-A-scale sparse sustained rate from the distribution alone
+    from repro.sparse import powerlaw_fiber_lengths
+    f = powerlaw_fiber_lengths(0, 10**6 if not smoke else 10**4,
+                               4 * 10**6 if not smoke else 4 * 10**4,
+                               alpha=1.1)
+    sb = sustained_mttkrp(cfg, SparseMTTKRPWorkload(fiber_lengths=f, rank=32))
+    row("sparse_sustained_powerlaw", 0.0,
+        f"{sb.sustained_petaops:.4f} PetaOps occ={sb.wavelength_occupancy:.3f}")
+
+
 # --------------------------------------------- multi-array engine scaling
 def bench_scaling():
     """Beyond-paper: the 'scalable engine' (paper SIII) quantified — arrays
@@ -197,16 +248,21 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows as JSON (e.g. BENCH_psram.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: modeled rows + a reduced sparse sweep, "
+                         "skip the slow wall-clock benches")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     bench_fig5_channels()
     bench_fig5_frequency()
     bench_headline()
-    bench_mttkrp_paths()
-    bench_psram_matmul()
-    bench_schedule_executor()
-    bench_cp_als()
+    if not args.smoke:
+        bench_mttkrp_paths()
+        bench_psram_matmul()
+        bench_schedule_executor()
+        bench_cp_als()
     bench_energy()
+    bench_sparse_mttkrp(smoke=args.smoke)
     bench_scaling()
     if args.json:
         with open(args.json, "w") as f:

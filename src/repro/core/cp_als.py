@@ -3,9 +3,12 @@ alternating least squares, with MTTKRP as the inner kernel.
 
 Each mode update solves  A_n <- MTTKRP_n(X, factors) @ pinv(hadamard of grams)
 followed by column normalization; fit is tracked against ||X||. The MTTKRP
-backend is pluggable: exact float, pSRAM-quantized, sparse COO, or the Pallas
-TPU kernel — this is how the paper's engine slots into the framework as a
-first-class feature.
+backend is pluggable: exact float, pSRAM-quantized, sparse COO, a
+``repro.sparse`` container (CSF streamed through the pSRAM tile schedule),
+or the Pallas TPU kernel — this is how the paper's engine slots into the
+framework as a first-class feature. Lossy backends get an exact convergence
+metric via ``exact_fit`` (the factor updates stay on the engine under test;
+only the fit inner product is recomputed exactly).
 """
 from __future__ import annotations
 
@@ -57,31 +60,81 @@ def cp_als(
     key: jax.Array | None = None,
     mttkrp_fn: Callable | None = None,
     coo: tuple[jax.Array, jax.Array, tuple[int, ...]] | None = None,
+    sparse=None,
     tol: float = 1e-7,
+    exact_fit: bool | None = None,
+    csfs: list | None = None,
 ) -> CPState:
-    """Run CP-ALS. Either ``x`` (dense) or ``coo=(indices, values, shape)``.
+    """Run CP-ALS on ``x`` (dense), ``coo=(indices, values, shape)``, or
+    ``sparse`` — any ``repro.sparse.formats`` container (COO/SortedCOO/
+    BlockedCOO/CSF). A container runs the streaming pSRAM schedule of
+    ``repro.sparse.stream`` as the MTTKRP backend (one mode-rooted CSF per
+    mode, built once).
 
-    mttkrp_fn(x_or_coo, factors, mode) -> (I_mode, R); defaults to the exact
-    dense path / sparse segment-sum path.
+    mttkrp_fn(x_or_none, factors, mode) -> (I_mode, R); defaults to the
+    exact dense path / sparse segment-sum path / streamed CSF path.
+
+    ``exact_fit`` controls the convergence metric: the inner-product fit
+    trick reuses the backend's last-mode MTTKRP, so a *lossy* backend (the
+    pSRAM-quantized engine, a custom ``mttkrp_fn``) biases the reported fit
+    — the tracked quantity drifts from ``1 - ||X - X̂||/||X||``. With
+    ``exact_fit`` (default: on whenever ``mttkrp_fn`` is supplied), the fit
+    inner product is recomputed with the exact sparse/dense path each sweep
+    while the factor updates still come from the backend under test.
     """
     if key is None:
         key = jax.random.PRNGKey(0)
-    if coo is not None:
+    exact_last_mode_fn = None
+    if sparse is not None:
+        if coo is not None or x is not None:
+            raise ValueError("pass exactly one of x / coo / sparse")
+        from repro.sparse.formats import CSF, SortedCOO, csf_for_mode
+        from repro.sparse.stream import stream_mttkrp
+
+        base = sparse.to_coo() if isinstance(sparse, CSF) else sparse
+        # duplicate coordinates are legal in the containers but would corrupt
+        # ||X|| (norm of values ≠ norm of the collapsed tensor) and with it
+        # the fit and the tol stopping rule — merge them up front
+        base = SortedCOO.from_coo(base, getattr(base, "mode_order", None),
+                                  dedupe=True)
+        shape = tuple(base.shape)
+        norm_x = jnp.linalg.norm(base.values)
+        # per-mode CSFs are the expensive host-side preprocessing: callers
+        # that already built them (cp_als_psram) pass them through, and a
+        # custom mttkrp_fn only ever needs the last mode (exact_fit), so
+        # build lazily on first use
+        built: dict = {}
+
+        def mode_csf(m):
+            if csfs is not None:
+                return csfs[m]
+            if m not in built:
+                built[m] = csf_for_mode(base, m)
+            return built[m]
+
+        default_fn = lambda _, fs, m: stream_mttkrp(mode_csf(m), tuple(fs))
+        exact_last_mode_fn = default_fn
+    elif coo is not None:
         indices, values, shape = coo
         norm_x = jnp.linalg.norm(values)
         default_fn = lambda _, fs, m: mttkrp_sparse(
             indices, values, tuple(fs), m, shape[m]
         )
+        exact_last_mode_fn = default_fn
     else:
         shape = x.shape
         norm_x = jnp.linalg.norm(x)
         default_fn = lambda t, fs, m: mttkrp_dense(t, fs, m)
+        exact_last_mode_fn = default_fn
     fn = mttkrp_fn or default_fn
+    if exact_fit is None:
+        exact_fit = mttkrp_fn is not None
 
     factors = init_factors(key, tuple(shape), rank)
     lam = jnp.ones((rank,))
     prev_fit, fit = -1.0, 0.0
     it = 0
+    last = len(shape) - 1
     for it in range(1, n_iter + 1):
         for mode in range(len(shape)):
             m = fn(x, factors, mode)                      # MTTKRP
@@ -91,8 +144,12 @@ def cp_als(
             factors[mode] = a / lam
         # fit = 1 - ||X - X_hat|| / ||X||, via the standard inner-product trick
         g_all = _gram_hadamard(factors, skip=-1) * jnp.outer(lam, lam)
-        # <X, X_hat> reuses the final-mode MTTKRP (m is MTTKRP for last mode)
-        inner = jnp.sum((m) * (factors[-1] * lam))
+        # <X, X_hat> needs the final-mode MTTKRP against the *current* other
+        # factors — m already is that (they don't change after the last
+        # update). A lossy backend's m would bias the metric, so recompute
+        # it exactly when asked.
+        m_fit = exact_last_mode_fn(x, factors, last) if exact_fit else m
+        inner = jnp.sum(m_fit * (factors[-1] * lam))
         norm_hat_sq = jnp.sum(g_all)
         resid = jnp.sqrt(jnp.maximum(norm_x**2 + norm_hat_sq - 2 * inner, 0.0))
         fit = float(1.0 - resid / norm_x)
@@ -103,15 +160,34 @@ def cp_als(
 
 
 def cp_als_psram(
-    coo: tuple[jax.Array, jax.Array, tuple[int, ...]],
+    coo,
     rank: int,
     n_iter: int = 25,
     key: jax.Array | None = None,
     adc_bits: int = 16,
 ) -> CPState:
-    """CP-ALS with the MTTKRP kernel running through the pSRAM numerics."""
-    indices, values, shape = coo
-    fn = lambda _, fs, m: mttkrp_sparse_psram(
-        indices, values, tuple(fs), m, shape[m], adc_bits=adc_bits
+    """CP-ALS with the MTTKRP kernel running through the pSRAM numerics.
+
+    ``coo`` is either the raw ``(indices, values, shape)`` triple (flat
+    quantized path) or a ``repro.sparse`` container (COO/SortedCOO/
+    BlockedCOO/CSF), which runs the *streaming* schedule with the quantized
+    chain — the full §IV array mapping. Either way the reported fit is the
+    exact one (``exact_fit``): factor updates see the lossy engine, the
+    convergence metric does not.
+    """
+    if isinstance(coo, tuple):
+        indices, values, shape = coo
+        fn = lambda _, fs, m: mttkrp_sparse_psram(
+            indices, values, tuple(fs), m, shape[m], adc_bits=adc_bits
+        )
+        return cp_als(None, rank, n_iter=n_iter, key=key, mttkrp_fn=fn, coo=coo)
+    from repro.sparse.formats import CSF, csf_for_mode
+    from repro.sparse.stream import stream_mttkrp
+
+    base = coo.to_coo() if isinstance(coo, CSF) else coo
+    csfs = [csf_for_mode(base, m) for m in range(len(base.shape))]
+    fn = lambda _, fs, m: stream_mttkrp(
+        csfs[m], tuple(fs), psram=True, adc_bits=adc_bits
     )
-    return cp_als(None, rank, n_iter=n_iter, key=key, mttkrp_fn=fn, coo=coo)
+    return cp_als(None, rank, n_iter=n_iter, key=key, mttkrp_fn=fn,
+                  sparse=base, csfs=csfs)

@@ -14,11 +14,13 @@ Paths provided (all N-mode generic):
                               chain vectorized over nonzeros.
   * ``mttkrp_sparse_psram`` — same chain through the pSRAM quantized numerics
                               (what the array would produce, §IV / Fig. 4).
-  * ``mttkrp_sparse_psram_scheduled`` — CP3 as a scatter-matmul lowered
-                              through the core.schedule tile executor, so the
-                              cycle accountant prices exactly what ran.
-The Pallas TPU kernel lives in kernels/mttkrp.py and is validated against
-``mttkrp_dense_kr``.
+  * ``mttkrp_sparse_psram_scheduled`` — the nonzero-streaming schedule of
+                              ``repro.sparse.stream`` (blocks of chain rows
+                              stored, gather masks driven per WDM channel),
+                              so the cycle accountant prices exactly what
+                              ran — and no scatter matrix is materialized.
+The Pallas TPU kernels live in kernels/ (dense fused MTTKRP, pSRAM matmul,
+blocked segment-sum for the CSF path) and are validated against refs.
 """
 from __future__ import annotations
 
@@ -75,6 +77,20 @@ def mttkrp_dense_kr(x: jax.Array, factors: list[jax.Array], mode: int) -> jax.Ar
 # sparse (COO)
 # ---------------------------------------------------------------------------
 
+def cp_chain_exact(indices, values, factors, mode) -> jax.Array:
+    """CP1 + CP2 over the nonzero stream, exact floats: the (nnz, R) chain
+    matrix ``d_p = x_p · ⊙ other-factor rows``. Shared by the segment-sum
+    path below and the streaming executor (repro.sparse.stream) — one
+    implementation is what makes their bit-identity a structural fact."""
+    had = None
+    for d in range(len(factors)):
+        if d == mode:
+            continue
+        rows = factors[d][indices[:, d]]            # (nnz, R)  gather
+        had = rows if had is None else had * rows   # CP 1
+    return values[:, None] * had                    # CP 2
+
+
 @partial(jax.jit, static_argnames=("mode", "out_rows"))
 def mttkrp_sparse(
     indices: jax.Array,        # (nnz, nmodes) int32
@@ -89,37 +105,17 @@ def mttkrp_sparse(
     CP2: scale by the nonzero value.
     CP3: scatter-add into the target factor row (segment sum).
     """
-    nmodes = len(factors)
-    had = None
-    for d in range(nmodes):
-        if d == mode:
-            continue
-        rows = factors[d][indices[:, d]]            # (nnz, R)  gather
-        had = rows if had is None else had * rows   # CP 1
-    scaled = values[:, None] * had                  # CP 2
+    scaled = cp_chain_exact(indices, values, factors, mode)
     return jax.ops.segment_sum(scaled, indices[:, mode], num_segments=out_rows)  # CP 3
 
 
-@partial(jax.jit, static_argnames=("mode", "out_rows", "adc_bits"))
-def mttkrp_sparse_psram(
-    indices: jax.Array,
-    values: jax.Array,
-    factors: tuple,
-    mode: int,
-    out_rows: int,
-    adc_bits: int = 16,
-) -> jax.Array:
-    """COO MTTKRP through the pSRAM array numerics (§IV, Figs. 3-4).
-
-    Each CP1/CP2 product passes through 8-bit operand quantization and the
-    ADC; CP3 accumulates post-ADC in the electrical domain (exact adds).
-    Quantization granularity mirrors the array: the *stored* operand gets a
-    per-row scale (one array column per factor row), the *driven* operand a
-    per-vector intensity scale.
-    """
+def cp_chain_psram(indices, values, factors, mode, adc_bits=16) -> jax.Array:
+    """CP1 + CP2 through the array numerics: each product passes 8-bit
+    operand quantization and the ADC (per-row scale for the stored operand,
+    per-vector intensity scale for the driven one). Shared by the
+    segment-sum path below and the streaming executor."""
     adc = ADCConfig(bits=adc_bits)
-    nmodes = len(factors)
-    others = [d for d in range(nmodes) if d != mode]
+    others = [d for d in range(len(factors)) if d != mode]
 
     def q(v, axis):
         qv, s = quantize_symmetric(v, axis=axis)
@@ -137,7 +133,24 @@ def mttkrp_sparse_psram(
     # CP 2
     qv, sv = q(values[:, None], -1)
     qh, sh = q(had, -1)
-    scaled = adc_requantize(qv * qh, adc, float(QMAX) * float(QMAX)) * (sv * sh)
+    return adc_requantize(qv * qh, adc, float(QMAX) * float(QMAX)) * (sv * sh)
+
+
+@partial(jax.jit, static_argnames=("mode", "out_rows", "adc_bits"))
+def mttkrp_sparse_psram(
+    indices: jax.Array,
+    values: jax.Array,
+    factors: tuple,
+    mode: int,
+    out_rows: int,
+    adc_bits: int = 16,
+) -> jax.Array:
+    """COO MTTKRP through the pSRAM array numerics (§IV, Figs. 3-4).
+
+    Each CP1/CP2 product passes through 8-bit operand quantization and the
+    ADC; CP3 accumulates post-ADC in the electrical domain (exact adds).
+    """
+    scaled = cp_chain_psram(indices, values, factors, mode, adc_bits)
     # CP 3 — exact electrical accumulation
     return jax.ops.segment_sum(scaled, indices[:, mode], num_segments=out_rows)
 
@@ -150,37 +163,28 @@ def mttkrp_sparse_psram_scheduled(
     out_rows: int,
     config=None,
 ):
-    """COO MTTKRP lowered through the tile-schedule executor (§IV, Figs. 3-4).
+    """COO MTTKRP lowered through the streaming tile schedule (§IV, Figs. 3-4).
 
-    CP1 gathers and Hadamard-multiplies the non-target factor rows and CP2
-    scales by the nonzero value (as in :func:`mttkrp_sparse`); CP3's
-    scatter-accumulate is then expressed as the matmul ``A = P @ D`` with
-    ``D = v·H`` the (nnz, R) scaled chain matrix stored tile-by-tile in the
-    array and ``P`` the (out_rows, nnz) one-hot scatter driven on the
-    word-lines — bit-line photocurrent summation performs the CP3 adds, and
-    post-ADC results accumulate electrically across nnz-tiles. Everything
-    lowers through ``core.schedule``, so ``count_cycles`` on the same program
-    prices exactly the cycles that ran. Materializes ``P``: intended for
-    validation and scheduling studies at test scale.
+    Delegates to ``repro.sparse.stream``: nonzeros are sorted into a
+    mode-rooted CSF, blocks of the CP2 chain ``D = v·H`` are stored
+    tile-by-tile down the array word-lines, and per-output-row gather masks
+    are driven per WDM channel — bit-line photocurrent summation performs
+    the CP3 adds and post-ADC segment outputs accumulate electrically
+    across blocks. The schedule lowers through ``core.schedule``
+    (``StoreTile``/``GatherDrive``), so ``count_cycles`` on the same program
+    prices exactly the cycles that ran. No ``(out_rows, nnz)`` scatter
+    matrix is ever materialized (the pre-streaming implementation built
+    one, capping it at toy sizes); the chain runs through the 8-bit + ADC
+    array numerics, matching ``mttkrp_sparse_psram`` bit-for-bit on the
+    sorted stream. The sort is host-side preprocessing: call with concrete
+    (non-traced) indices, outside jit.
     """
-    from .psram import PsramConfig
-    from .schedule import build_matmul_program, execute
+    from repro.sparse.stream import stream_mttkrp_coo
 
-    cfg = config or PsramConfig()
-    nmodes = len(factors)
-    had = None
-    for d in range(nmodes):
-        if d == mode:
-            continue
-        rows = factors[d][indices[:, d]]
-        had = rows if had is None else had * rows           # CP 1
-    dmat = values[:, None] * had                            # CP 2: (nnz, R)
-    nnz, rank = dmat.shape
-    scatter = (
-        indices[:, mode][None, :] == jnp.arange(out_rows)[:, None]
-    ).astype(jnp.float32)                                   # (out_rows, nnz)
-    program = build_matmul_program(out_rows, nnz, rank, cfg)
-    return execute(program, scatter, dmat)                  # CP 3 on bit-lines
+    return stream_mttkrp_coo(
+        indices, values, tuple(factors), mode, out_rows,
+        config=config, psram=True,
+    )
 
 
 def dense_to_coo(x: jax.Array) -> tuple[jax.Array, jax.Array]:

@@ -41,6 +41,39 @@ class MTTKRPWorkload:
         return 2 * self.rank * self.nonzeros
 
 
+@dataclasses.dataclass(frozen=True)
+class SparseMTTKRPWorkload:
+    """Sparse MTTKRP described by its *real* fiber-length distribution.
+
+    ``fiber_lengths[r]`` is the nonzero count of the r-th nonempty output
+    row (``CSF.fiber_lengths()``); every term of the sustained model derives
+    from it instead of the dense ``nnz // i`` occupancy proxy, because with
+    power-law fibers the proxy is wrong by orders of magnitude: a block of
+    one mega-fiber drives a single channel, a block of 256 singleton fibers
+    needs five optical cycles to drain its segments.
+    """
+
+    fiber_lengths: tuple[int, ...] | object   # sequence / np array of int
+    rank: int = 32
+
+    @property
+    def nonzeros(self) -> int:
+        import numpy as np
+        return int(np.asarray(self.fiber_lengths).sum())
+
+    @property
+    def n_fibers(self) -> int:
+        import numpy as np
+        f = np.asarray(self.fiber_lengths)
+        return int((f > 0).sum())
+
+    @property
+    def macs(self) -> int:
+        # same convention as MTTKRPWorkload: CP1+CP2 muls, CP3 folded into
+        # the 2 ops/MAC
+        return 2 * self.rank * self.nonzeros
+
+
 def peak_ops(cfg: PsramConfig) -> float:
     """Paper headline model: ops/s, linear in frequency and channels (Fig. 5)."""
     cfg.validate()
@@ -64,14 +97,21 @@ class SustainedBreakdown:
         return self.fill_utilization * self.wavelength_occupancy * self.reconfig_efficiency
 
 
-def sustained_mttkrp(cfg: PsramConfig, wl: MTTKRPWorkload) -> SustainedBreakdown:
+def sustained_mttkrp(
+    cfg: PsramConfig, wl: "MTTKRPWorkload | SparseMTTKRPWorkload"
+) -> SustainedBreakdown:
     """Schedule-aware sustained performance of MTTKRP on one array.
 
-    Mapping (Figs. 3-4): factor rows live down array columns, R elements per
-    column. A tile therefore covers min(R, rows) rank elements x word_cols
-    concurrent rows-of-B, and each optical cycle retires one CP1/CP2 slice per
-    wavelength channel.
+    Dense mapping (Figs. 3-4): factor rows live down array columns, R
+    elements per column. A tile therefore covers min(R, rows) rank elements
+    x word_cols concurrent rows-of-B, and each optical cycle retires one
+    CP1/CP2 slice per wavelength channel.
+
+    A :class:`SparseMTTKRPWorkload` dispatches to the sparse streaming model
+    instead — occupancy from the workload's real fiber-length distribution.
     """
+    if isinstance(wl, SparseMTTKRPWorkload):
+        return sustained_sparse_mttkrp(cfg, wl)
     cfg.validate()
     peak = peak_petaops(cfg)
 
@@ -104,6 +144,46 @@ def sustained_mttkrp(cfg: PsramConfig, wl: MTTKRPWorkload) -> SustainedBreakdown
         reconfig_efficiency=reconf,
         sustained_petaops=sustained,
     )
+
+
+def sustained_sparse_mttkrp(
+    cfg: PsramConfig, wl: SparseMTTKRPWorkload
+) -> SustainedBreakdown:
+    """Sustained performance of the *streaming* sparse schedule
+    (repro.sparse.stream), predicted from the fiber-length distribution.
+
+    Model of one array: the sorted nonzero stream is cut into blocks of
+    ``rows`` chain rows; writing a block costs one cycle per nonzero per
+    rank-tile, and draining it costs ``ceil(segments / wavelengths)`` optical
+    cycles per rank-tile, where ``segments`` counts the output rows
+    intersecting the block (a fiber spanning blocks re-occupies a channel in
+    each). Fill is the stored-block occupancy, wavelength occupancy is
+    segments over channel-cycles offered — both direct functions of the
+    distribution, not of an ``nnz // i`` average. The block layout is the
+    scheduler's own (``schedule.stream_block_layout``); the closed forms
+    below aggregate it without building the op list, and
+    ``measured_utilization(build_stream_program(...))`` must agree within 5%
+    on the §V-A configuration (tests/test_sparse.py).
+    """
+    from .schedule import CycleCounts, stream_block_layout
+
+    cfg.validate()
+    nnz_b, seg_b = stream_block_layout(wl.fiber_lengths, cfg.rows)
+    nnz = int(nnz_b.sum())
+    rank = int(wl.rank)
+    tiles = -(-rank // cfg.word_cols)
+    if nnz == 0:
+        return breakdown_from_counts(cfg, CycleCounts(0, 0, 0, 0, 0, 0))
+    drain_b = -(-seg_b // cfg.wavelengths)
+    counts = CycleCounts(
+        write_cycles=tiles * nnz,
+        compute_cycles=tiles * int(drain_b.sum()),
+        macs=nnz * rank,
+        channel_cycles=tiles * int(seg_b.sum()),
+        live_word_cycles=rank * int((drain_b * nnz_b).sum()),
+        stores=tiles * len(nnz_b),
+    )
+    return breakdown_from_counts(cfg, counts)
 
 
 def breakdown_from_counts(cfg: PsramConfig, counts) -> SustainedBreakdown:

@@ -34,6 +34,12 @@ Paper map: ``build_matmul_program`` / ``execute`` implement the §IV mapping
 (weights stationary, inputs WDM-batched over wavelengths); ``count_cycles``
 and ``build_mttkrp_program`` implement the §V predictive model's schedule;
 ``program_energy`` extends it with the §III-B device energies.
+
+Sparse MTTKRP adds a third op: :class:`GatherDrive`, the nonzero-streaming
+schedule of ``repro.sparse.stream`` (store a block of CP2 chain rows, drive
+per-output-row gather masks per WDM channel). The accountant prices it with
+the same counters, so sparse programs flow through ``count_cycles`` /
+``program_energy`` / ``perf_model.measured_utilization`` unchanged.
 """
 from __future__ import annotations
 
@@ -91,6 +97,39 @@ class Drive:
 
 
 @dataclasses.dataclass(frozen=True)
+class GatherDrive:
+    """Drive per-output-row gather masks against a stored nonzero tile.
+
+    The sparse-MTTKRP streaming schedule (repro.sparse.stream, Wijeratne et
+    al.'s nonzero-streaming mapping): a tile holds one block of CP2 chain
+    rows (one nonzero per word-line), and each optical cycle drives up to
+    ``wavelengths`` binary gather masks — one per pending output-row
+    *segment*, each on its own WDM channel — so the bit-lines perform CP3's
+    segment sums and the per-channel ADC outputs accumulate electrically
+    into their output rows.
+
+    ``cycles``       optical cycles issued (⌈segments / channels⌉ batches).
+    ``segments``     output-row segments served; each occupies one channel
+                     for one cycle, so ``segments`` is this op's
+                     channel-cycle occupancy.
+    ``live_words``   stored words in the tile (block_nnz × rank-tile width).
+    ``active_words`` mask-selected word-MACs over all cycles. Every stored
+                     nonzero belongs to exactly one segment, so this equals
+                     ``live_words`` when all segments are driven — unlike
+                     :class:`Drive`, a word MACs on *one* channel, not all.
+    """
+
+    cycles: int
+    segments: int
+    live_words: int
+    active_words: int
+
+    @property
+    def macs(self) -> int:
+        return self.active_words
+
+
+@dataclasses.dataclass(frozen=True)
 class TileProgram:
     """A schedule: ops in issue order, repeated ``repeats`` times.
 
@@ -132,6 +171,37 @@ def build_matmul_program(m: int, k: int, n: int, config: PsramConfig | None = No
                 ops.append(Drive(cycles=1, channels=m1 - m0, live_words=live,
                                  m0=m0, m1=m1))
     return TileProgram(config=cfg, ops=tuple(ops), shape=(m, k, n))
+
+
+def stream_block_layout(fiber_lengths, rows: int):
+    """Per-block nonzero counts and segment counts of a sorted nonzero
+    stream — the layout both the sparse streaming scheduler
+    (``repro.sparse.stream.build_stream_program``) and the sparse analytical
+    model (``perf_model.sustained_sparse_mttkrp``) are defined over.
+
+    Blocks are ``rows`` consecutive nonzeros (the last one ragged); a fiber
+    spanning blocks ``b0..b1`` contributes one output-row segment to each.
+    Returns ``(nnz_per_block, segments_per_block)`` as int64 numpy arrays.
+    """
+    import numpy as np
+
+    f = np.asarray(fiber_lengths, dtype=np.int64)
+    f = f[f > 0]
+    nnz = int(f.sum())
+    if nnz == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    n_blocks = -(-nnz // rows)
+    nnz_b = np.full(n_blocks, rows, dtype=np.int64)
+    nnz_b[-1] = nnz - rows * (n_blocks - 1)
+    ends = np.cumsum(f)
+    starts = ends - f
+    b0 = starts // rows
+    b1 = (ends - 1) // rows
+    # interval add: fiber i puts one segment in every block of [b0, b1]
+    delta = np.zeros(n_blocks + 1, dtype=np.int64)
+    np.add.at(delta, b0, 1)
+    np.add.at(delta, b1 + 1, -1)
+    return nnz_b, np.cumsum(delta)[:n_blocks]
 
 
 def build_mttkrp_program(cfg: PsramConfig, wl) -> TileProgram:
@@ -218,6 +288,11 @@ def count_cycles(program: TileProgram) -> CycleCounts:
             compute += op.cycles
             macs += op.macs
             chan_cyc += op.cycles * op.channels
+            live_cyc += op.cycles * op.live_words
+        elif isinstance(op, GatherDrive):
+            compute += op.cycles
+            macs += op.macs
+            chan_cyc += op.segments
             live_cyc += op.cycles * op.live_words
         else:
             raise TypeError(f"unknown op {op!r}")

@@ -14,6 +14,7 @@ from . import ref
 from .flash_attention import flash_attention
 from .mttkrp import mttkrp_fused
 from .psram_matmul import psram_matmul
+from .segment_sum import blocked_segment_sum
 
 
 def _on_tpu() -> bool:
@@ -45,6 +46,20 @@ def mttkrp_op(
         return ref.mttkrp_ref(x0, b, c)
     interpret = backend == "interpret" or (backend == "auto" and not _on_tpu())
     return mttkrp_fused(x0, b, c, bi=bi, bk=bk, interpret=interpret)
+
+
+def blocked_segment_sum_op(
+    data: jax.Array, seg_ids: jax.Array, n_seg: int, backend: str = "auto"
+) -> jax.Array:
+    """Per-block segment sums for the CSF streaming path: (B, n_seg, R).
+
+    ``data`` (B, bn, R) holds blocks of CP2 chain rows, ``seg_ids`` (B, bn)
+    their block-local output-row segment; see kernels/segment_sum.py.
+    """
+    if backend == "ref":
+        return ref.blocked_segment_sum_ref(data, seg_ids, n_seg)
+    interpret = backend == "interpret" or (backend == "auto" and not _on_tpu())
+    return blocked_segment_sum(data, seg_ids, n_seg, interpret=interpret)
 
 
 def flash_attention_op(

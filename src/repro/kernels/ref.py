@@ -39,6 +39,18 @@ def mttkrp_ref(x0: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
     return x0 @ kr
 
 
+def blocked_segment_sum_ref(
+    data: jax.Array,      # (B, bn, R) chain-row blocks
+    seg_ids: jax.Array,   # (B, bn) block-local segment ids in [0, n_seg)
+    n_seg: int,
+) -> jax.Array:
+    """Per-block partial segment sums via a one-hot einsum: (B, n_seg, R)."""
+    onehot = (
+        seg_ids[:, None, :] == jnp.arange(n_seg)[None, :, None]
+    ).astype(jnp.float32)                                  # (B, S, bn)
+    return jnp.einsum("bsn,bnr->bsr", onehot, data.astype(jnp.float32))
+
+
 def attention_ref(
     q: jax.Array,         # (B, H, S, D)
     k: jax.Array,         # (B, Hkv, S, D)

@@ -1,2 +1,8 @@
-from .engine import ServeEngine, make_prefill, make_serve_step
+from .engine import (
+    ServeEngine,
+    make_prefill,
+    make_serve_step,
+    photonic_offload_report,
+    sparse_offload_report,
+)
 from .kv_cache import PagedCacheConfig, PagedKVManager, gather_cache

@@ -10,6 +10,9 @@ the decode_32k / long_500k cells measure.
 onto the pSRAM engine by lowering each projection through the core.schedule
 tile IR: counted compute/write cycles, measured utilization, and §III-B
 energies — the serving-side consumer of the schedule accountant.
+`sparse_offload_report` does the same for a sparse MTTKRP workload via the
+nonzero-streaming schedule (repro.sparse), including nnz-balanced
+multi-array splits.
 """
 from __future__ import annotations
 
@@ -122,6 +125,46 @@ def photonic_offload_report(cfg, batch: int = 1, psram_config=None, fidelity: bo
         "utilization": breakdown_from_counts(arr, counts),
         "energy": energy,
         "projection_rel_err": rel_err,
+    }
+
+
+def sparse_offload_report(fiber_lengths, rank: int = 32, psram_config=None,
+                          n_arrays: int = 1):
+    """Schedule-derived cost of one sparse MTTKRP on the pSRAM engine.
+
+    The sparse-side sibling of :func:`photonic_offload_report`: builds the
+    nonzero-streaming program (repro.sparse.stream) for the workload's real
+    fiber-length distribution, prices it with the counted-cycle accountant
+    and the §III-B device energies, and cross-checks the counted utilization
+    against the sparse-aware analytical model. ``n_arrays > 1`` prices an
+    nnz-balanced multi-array split (makespan = the slowest array).
+
+    Returns a dict: cycles (CycleCounts, summed), time_s (critical path),
+    utilization (SustainedBreakdown from counted cycles), energy
+    (EnergyBreakdown, summed), model (the analytical SustainedBreakdown),
+    imbalance (max/mean nonzero load).
+    """
+    from repro.core.perf_model import (
+        SparseMTTKRPWorkload,
+        breakdown_from_counts,
+        sustained_mttkrp,
+    )
+    from repro.core.psram import PsramConfig
+    from repro.core.schedule import program_energy
+    from repro.sparse.partition import partition_fiber_lengths
+
+    arr = psram_config or PsramConfig()
+    ps = partition_fiber_lengths(fiber_lengths, n_arrays, rank, arr)
+    energy = sum((program_energy(p) for p in ps.programs[1:]),
+                 program_energy(ps.programs[0]))
+    return {
+        "cycles": ps.counts,
+        "time_s": ps.critical_path_cycles / (arr.frequency_ghz * 1e9),
+        "utilization": breakdown_from_counts(arr, ps.counts),
+        "energy": energy,
+        "model": sustained_mttkrp(
+            arr, SparseMTTKRPWorkload(fiber_lengths=fiber_lengths, rank=rank)),
+        "imbalance": ps.imbalance,
     }
 
 

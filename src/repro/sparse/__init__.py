@@ -1,0 +1,69 @@
+"""repro.sparse — the sparse-tensor subsystem of the pSRAM engine.
+
+The paper's workload is tensor decomposition, and real decomposition tensors
+are sparse. This package turns the repo's flat COO triple into a real
+subsystem:
+
+* ``formats``   — COO / SortedCOO / BlockedCOO / CSF containers with
+  conversions, validation, and root-fiber slicing.
+* ``synth``     — FROSTT-style synthetic tensors with power-law fiber
+  lengths (the distribution the performance model now consumes).
+* ``stream``    — the nonzero-streaming MTTKRP schedule: blocks of CP2
+  chain rows stored in the array, per-output-row gather masks driven per
+  WDM channel, post-ADC electrical accumulation; lowered through the
+  ``core.schedule`` IR (``StoreTile``/``GatherDrive``) and executed
+  bit-identically to ``mttkrp_sparse`` without any scatter matrix.
+* ``partition`` — nnz-balanced multi-array partitioning whose array count
+  comes from the ``repro.dist.sharding`` rule set.
+
+The worked mapping (which operand is stored vs driven, where CP3
+accumulates) is documented in ``stream``'s module docstring and walked in
+``examples/sparse_decompose.py``.
+"""
+from .formats import COO, CSF, BlockedCOO, SortedCOO, csf_for_mode
+from .partition import (
+    MeshedSparseTensor,
+    Partition,
+    PartitionedSchedule,
+    arrays_for_mesh,
+    imbalance,
+    nnz_balanced_partitions,
+    partition_csf,
+    partition_fiber_lengths,
+)
+from .stream import (
+    StreamedMTTKRP,
+    build_stream_program,
+    rank_tile_widths,
+    stream_mttkrp,
+    stream_mttkrp_blocked,
+    stream_mttkrp_coo,
+    stream_mttkrp_priced,
+)
+from .synth import FiberStats, powerlaw_coo, powerlaw_fiber_lengths
+
+__all__ = [
+    "COO",
+    "CSF",
+    "BlockedCOO",
+    "SortedCOO",
+    "FiberStats",
+    "MeshedSparseTensor",
+    "Partition",
+    "PartitionedSchedule",
+    "StreamedMTTKRP",
+    "arrays_for_mesh",
+    "build_stream_program",
+    "csf_for_mode",
+    "imbalance",
+    "nnz_balanced_partitions",
+    "partition_csf",
+    "partition_fiber_lengths",
+    "powerlaw_coo",
+    "powerlaw_fiber_lengths",
+    "rank_tile_widths",
+    "stream_mttkrp",
+    "stream_mttkrp_blocked",
+    "stream_mttkrp_coo",
+    "stream_mttkrp_priced",
+]

@@ -1,0 +1,271 @@
+"""Streaming sparse MTTKRP through the pSRAM tile-schedule IR.
+
+The paper's CP1→CP2→CP3 chain (§IV, Figs. 3-4) for a *sparse* tensor, with
+no scatter matrix anywhere: the old scheduled path expressed CP3 as
+``P @ D`` with ``P`` a dense ``(out_rows, nnz)`` one-hot — an O(I·nnz)
+object that dies beyond toy sizes. This module replaces it with the
+nonzero-streaming mapping (Wijeratne et al., "Performance Modeling Sparse
+MTTKRP Using Optical SRAM on FPGA"):
+
+1. Sort nonzeros by the output mode (a :class:`~repro.sparse.formats.CSF`
+   with the target mode at the root) so every output row is a contiguous
+   *segment* of the nonzero stream.
+2. Cut the stream into blocks of at most ``cfg.rows`` nonzeros. For each
+   block, **store** its CP2 chain rows ``d_p = x_p · ⊙ other-factor rows``
+   down the array word-lines (one nonzero per word-line, R values across
+   the word columns — ``⌈R / word_cols⌉`` rank-tiles when R is wide).
+3. **Drive** one binary gather mask per output-row segment, each on its own
+   WDM channel (up to ``wavelengths`` segments per optical cycle): bit-line
+   photocurrent summation performs CP3's adds per channel, and the
+   post-ADC per-channel outputs accumulate *electrically* into their output
+   rows — a segment that spans a block boundary carries its partial sum
+   into the next block's accumulation.
+
+``build_stream_program`` emits the schedule as ``StoreTile``/``GatherDrive``
+ops, so ``count_cycles`` / ``program_energy`` price exactly what runs, and
+``perf_model.sustained_mttkrp`` on a ``SparseMTTKRPWorkload`` is validated
+against it. ``stream_mttkrp`` executes the same schedule numerically: block
+by block, in nonzero order, with electrical accumulation in exactly the
+fold order of ``jax.ops.segment_sum`` — it is asserted *bit-identical* to
+``core.mttkrp.mttkrp_sparse`` (and, with ``psram=True``, to
+``mttkrp_sparse_psram``) in tests/test_sparse.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.psram import PsramConfig
+from repro.core.mttkrp import cp_chain_exact, cp_chain_psram
+from repro.core.schedule import (
+    GatherDrive,
+    StoreTile,
+    TileProgram,
+    stream_block_layout,
+)
+
+from .formats import COO, CSF, csf_for_mode
+
+
+def rank_tile_widths(rank: int, word_cols: int) -> tuple[int, ...]:
+    """Column widths of the rank-tiles one chain row splits into."""
+    if rank < 1:
+        raise ValueError("rank must be positive")
+    full, rem = divmod(rank, word_cols)
+    return (word_cols,) * full + ((rem,) if rem else ())
+
+
+def build_stream_program(
+    fiber_lengths: np.ndarray,
+    rank: int,
+    config: PsramConfig | None = None,
+) -> TileProgram:
+    """The streaming schedule for a fiber-length distribution, as an IR
+    program (accounting-grade: geometry lives in the ops, ``shape`` stays
+    None — the numeric executor is :func:`stream_mttkrp`).
+
+    ``fiber_lengths`` is nonzeros-per-nonempty-output-row in row order
+    (``CSF.fiber_lengths()`` / ``SortedCOO.fiber_lengths()``), which is all
+    the schedule depends on — paper-scale workloads can be priced from the
+    distribution alone without materializing coordinates.
+    """
+    cfg = config or PsramConfig()
+    cfg.validate()
+    widths = rank_tile_widths(rank, cfg.word_cols)
+    nnz_b, seg_b = stream_block_layout(fiber_lengths, cfg.rows)
+    ops: list = []
+    for bn, bs in zip(nnz_b.tolist(), seg_b.tolist()):
+        for w in widths:
+            live = bn * w
+            ops.append(StoreTile(rows_written=bn, live_words=live))
+            ops.append(GatherDrive(
+                cycles=-(-bs // cfg.wavelengths),
+                segments=bs,
+                live_words=live,
+                active_words=live,
+            ))
+    return TileProgram(config=cfg, ops=tuple(ops))
+
+
+# ---------------------------------------------------------------------------
+# numeric executor
+# ---------------------------------------------------------------------------
+
+def _stream_scatter(dmat, row_ids, out_rows, rows):
+    """CP3, streamed: scan the chain matrix block-by-block (``rows`` nonzeros
+    per block) and accumulate each block's post-ADC segment outputs
+    electrically into the output rows.
+
+    The scatter-add per block applies its updates in nonzero order, and the
+    scan walks blocks in stream order, so the float accumulation order is
+    exactly that of one global ``jax.ops.segment_sum`` over the sorted
+    stream — segments that span block boundaries pick up their carry because
+    the running output row *is* the carry. No ``(out_rows, nnz)`` object is
+    ever formed; peak extra memory is the padded chain matrix itself.
+    """
+    nnz, rank = dmat.shape
+    n_blocks = max(1, -(-nnz // rows))
+    pad = n_blocks * rows - nnz
+    # padding rows scatter 0.0 into a sacrificial row `out_rows`
+    d = jnp.pad(dmat, ((0, pad), (0, 0))).reshape(n_blocks, rows, rank)
+    r = jnp.pad(row_ids, (0, pad), constant_values=out_rows)
+    r = r.reshape(n_blocks, rows)
+
+    def body(out, blk):
+        d_b, r_b = blk
+        return out.at[r_b].add(d_b), None
+
+    out0 = jnp.zeros((out_rows + 1, rank), dtype=dmat.dtype)
+    out, _ = jax.lax.scan(body, out0, (d, r))
+    return out[:out_rows]
+
+
+@partial(jax.jit, static_argnames=("mode", "out_rows", "rows", "psram", "adc_bits"))
+def _stream_exec(indices, values, factors, mode, out_rows, rows, psram, adc_bits):
+    """Chain + streamed CP3 under ONE jit — the same compilation boundary as
+    ``mttkrp_sparse`` / ``mttkrp_sparse_psram``, which is what makes the two
+    paths bit-identical (a different jit boundary lets XLA rewrite the chain
+    by ~1 ulp differently)."""
+    if psram:
+        dmat = cp_chain_psram(indices, values, factors, mode, adc_bits)
+    else:
+        dmat = cp_chain_exact(indices, values, factors, mode)
+    return _stream_scatter(dmat, indices[:, mode], out_rows, rows)
+
+
+def stream_mttkrp(
+    csf: CSF,
+    factors: tuple,
+    config: PsramConfig | None = None,
+    psram: bool = False,
+    adc_bits: int = 16,
+) -> jax.Array:
+    """Execute the streaming schedule numerically: (out_rows, R).
+
+    ``csf``'s root mode is the target mode. With ``psram=False`` the chain is
+    exact and the result is bit-identical to ``mttkrp_sparse`` on the same
+    (sorted) nonzero stream; with ``psram=True`` the chain runs through the
+    8-bit + ADC array numerics and the result is bit-identical to
+    ``mttkrp_sparse_psram`` (both asserted in tests/test_sparse.py). Either
+    way CP3 is the streamed electrical accumulation of
+    :func:`_stream_scatter` — no scatter matrix.
+    """
+    cfg = config or PsramConfig()
+    mode = csf.mode_order[0]
+    return _stream_exec(
+        csf.expanded_indices(), csf.values, tuple(factors),
+        mode, csf.shape[mode], cfg.rows, psram, adc_bits,
+    )
+
+
+def stream_mttkrp_blocked(
+    csf: CSF,
+    factors: tuple,
+    config: PsramConfig | None = None,
+    backend: str = "auto",
+) -> jax.Array:
+    """The same streaming schedule on the Pallas blocked segment-sum kernel.
+
+    One grid step per nonzero block: the block's gather masks are formed in
+    VMEM and one MXU matmul retires all its segment sums
+    (kernels/segment_sum.py); per-block partials are then scattered into the
+    output — O(segments) adds, still no global scatter matrix. Combining
+    partials reassociates the float adds, so this path is allclose (not
+    bit-equal) to :func:`stream_mttkrp`; use it for throughput, the scan
+    path for electrical-order exactness.
+    """
+    from repro.kernels.ops import blocked_segment_sum_op
+
+    cfg = config or PsramConfig()
+    rows = cfg.rows
+    mode = csf.mode_order[0]
+    out_rows = csf.shape[mode]
+    indices = csf.expanded_indices()
+    dmat = cp_chain_exact(indices, csf.values, tuple(factors), mode)
+    nnz, rank = dmat.shape
+    n_blocks = max(1, -(-nnz // rows))
+    pad = n_blocks * rows - nnz
+    d = jnp.pad(dmat, ((0, pad), (0, 0))).reshape(n_blocks, rows, rank)
+
+    # block-local segment ids + the (block, segment) -> output row map,
+    # host-side preprocessing like the CSF build itself
+    rid = np.pad(csf.row_of_nonzero().astype(np.int64), (0, pad),
+                 constant_values=-1).reshape(n_blocks, rows)
+    new = np.ones((n_blocks, rows), dtype=bool)
+    new[:, 1:] = rid[:, 1:] != rid[:, :-1]
+    local = np.cumsum(new, axis=1) - 1                     # (B, rows)
+    n_seg = int(local.max()) + 1
+    seg_rows = np.full((n_blocks, n_seg), out_rows, dtype=np.int64)
+    b_ix, p_ix = np.nonzero(new)
+    seg_rows[b_ix, local[b_ix, p_ix]] = rid[b_ix, p_ix]
+    seg_rows[seg_rows < 0] = out_rows                      # padding rows
+
+    partials = blocked_segment_sum_op(
+        d, jnp.asarray(local, dtype=jnp.int32), n_seg, backend=backend
+    )                                                       # (B, S, R)
+    out = jnp.zeros((out_rows + 1, rank), dtype=jnp.float32)
+    out = out.at[jnp.asarray(seg_rows.reshape(-1))].add(
+        partials.reshape(n_blocks * n_seg, rank)
+    )
+    return out[:out_rows]
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamedMTTKRP:
+    """Result + priced schedule of one streamed sparse MTTKRP."""
+
+    result: jax.Array
+    program: TileProgram
+
+
+def stream_mttkrp_priced(
+    csf: CSF,
+    factors: tuple,
+    config: PsramConfig | None = None,
+    psram: bool = False,
+    adc_bits: int = 16,
+) -> StreamedMTTKRP:
+    """Run :func:`stream_mttkrp` and return the executed schedule alongside
+    the result, so ``count_cycles``/``program_energy`` price exactly it."""
+    cfg = config or PsramConfig()
+    rank = int(factors[0].shape[-1])
+    return StreamedMTTKRP(
+        result=stream_mttkrp(csf, factors, cfg, psram=psram, adc_bits=adc_bits),
+        program=build_stream_program(csf.fiber_lengths(), rank, cfg),
+    )
+
+
+def stream_mttkrp_coo(
+    indices: jax.Array,
+    values: jax.Array,
+    factors: tuple,
+    mode: int,
+    out_rows: int,
+    config: PsramConfig | None = None,
+    psram: bool = False,
+    adc_bits: int = 16,
+) -> jax.Array:
+    """COO-triple front door (sorts into a mode-rooted CSF first) — the
+    delegation target of ``core.mttkrp.mttkrp_sparse_psram_scheduled``.
+
+    The sort/CSF build is host-side preprocessing (numpy), so ``indices``
+    and ``values`` must be concrete arrays — call it outside jit, like the
+    CSF constructors themselves. The per-sweep numeric work (chain +
+    streamed CP3) is jitted internally.
+    """
+    if isinstance(indices, jax.core.Tracer):
+        raise TypeError(
+            "stream_mttkrp_coo sorts nonzeros host-side and cannot run under "
+            "jit; build the CSF outside the traced region and call "
+            "stream_mttkrp instead"
+        )
+    # the factors carry the exact dims; the target mode honors out_rows
+    shape = [int(f.shape[0]) for f in factors]
+    shape[mode] = out_rows
+    coo = COO(indices=indices, values=values, shape=tuple(shape))
+    csf = csf_for_mode(coo, mode)
+    return stream_mttkrp(csf, factors, config, psram=psram, adc_bits=adc_bits)

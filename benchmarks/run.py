@@ -1,14 +1,18 @@
 """Benchmark harness — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows. "derived" carries the
+Prints ``name,us_per_call,derived,backend`` CSV rows. "derived" carries the
 figure-specific number (PetaOps, fit, rel-error...) so each row maps back to
-a paper claim. Wall-clock rows time the *JAX CPU* execution (this container);
-modeled rows come from the paper's predictive performance model and the
-TPU roofline constants.
+a paper claim; "backend" is the registry name (repro.backends) the row
+exercises, so the perf trajectory is attributable per backend. Wall-clock
+rows time the *JAX CPU* execution (this container); modeled rows come from
+the paper's predictive performance model and the TPU roofline constants.
 
 ``--json BENCH_psram.json`` additionally writes the rows as a JSON list of
-``{name, us_per_call, derived}`` objects so the perf trajectory (notably the
-loop-oracle vs. vectorized-executor speedup) is machine-trackable across PRs.
+``{name, us_per_call, derived, backend}`` objects so the perf trajectory
+(notably the loop-oracle vs. vectorized-executor speedup) is
+machine-trackable across PRs. ``--backend NAME`` (repeatable) scopes the
+run to the benches exercising those backends — sweeps can be scoped during
+development instead of always running the full matrix.
 """
 from __future__ import annotations
 
@@ -49,11 +53,20 @@ def _time(fn, *args, n=5, warmup=2):
 
 
 ROWS: list[dict] = []
+SELECTED: set | None = None   # None = every registered backend
 
 
-def row(name, us, derived):
-    ROWS.append({"name": name, "us_per_call": round(us, 1), "derived": str(derived)})
-    print(f"{name},{us:.1f},{derived}")
+def selected(*names) -> bool:
+    """Is any of these backends in the --backend scope?"""
+    return SELECTED is None or bool(SELECTED & set(names))
+
+
+def row(name, us, derived, backend="analytical"):
+    if not selected(backend):
+        return
+    ROWS.append({"name": name, "us_per_call": round(us, 1),
+                 "derived": str(derived), "backend": backend})
+    print(f"{name},{us:.1f},{derived},{backend}")
 
 
 # ----------------------------------------------------------------- Fig 5(i)
@@ -97,18 +110,23 @@ def bench_mttkrp_paths():
     fs = [a, b, c]
     flops = 2 * 256 * 64 * 128 * 32 * 2
 
-    f_dense = jax.jit(lambda t: mttkrp_dense(t, fs, 0))
-    us = _time(f_dense, x)
-    row("mttkrp_dense_einsum", us, f"{flops/us/1e3:.1f} GFLOP/s cpu")
+    if selected("exact"):
+        f_dense = jax.jit(lambda t: mttkrp_dense(t, fs, 0))
+        us = _time(f_dense, x)
+        row("mttkrp_dense_einsum", us, f"{flops/us/1e3:.1f} GFLOP/s cpu",
+            "exact")
 
-    idx, vals = dense_to_coo(x)
-    f_sparse = jax.jit(lambda i, v: mttkrp_sparse(i, v, tuple(fs), 0, 256))
-    us = _time(f_sparse, idx, vals)
-    row("mttkrp_sparse_coo", us, f"{flops/us/1e3:.1f} GFLOP/s cpu")
+        idx, vals = dense_to_coo(x)
+        f_sparse = jax.jit(lambda i, v: mttkrp_sparse(i, v, tuple(fs), 0, 256))
+        us = _time(f_sparse, idx, vals)
+        row("mttkrp_sparse_coo", us, f"{flops/us/1e3:.1f} GFLOP/s cpu",
+            "exact")
 
-    f_kr = jax.jit(lambda t: mttkrp_op(t, b, c, backend="ref"))
-    us = _time(f_kr, x)
-    row("mttkrp_kr_oracle", us, f"{flops/us/1e3:.1f} GFLOP/s cpu")
+    if selected("pallas"):
+        f_kr = jax.jit(lambda t: mttkrp_op(t, b, c, backend="ref"))
+        us = _time(f_kr, x)
+        row("mttkrp_kr_oracle", us, f"{flops/us/1e3:.1f} GFLOP/s cpu",
+            "pallas")
 
     wl = MTTKRPWorkload(i=256, j=64, k=128, rank=32)
     row("mttkrp_psram_modeled", time_to_solution_s(PsramConfig(), wl) * 1e6,
@@ -125,7 +143,7 @@ def bench_psram_matmul():
     exact = x @ w
     got = f(x, w)
     rel = float(jnp.linalg.norm(got - exact) / jnp.linalg.norm(exact))
-    row("psram_matmul_ref", us, f"rel_err={rel:.4f}")
+    row("psram_matmul_ref", us, f"rel_err={rel:.4f}", "pallas")
 
 
 # ------------------------------------------- tile-schedule executor (§IV)
@@ -140,33 +158,48 @@ def bench_schedule_executor():
     x = jax.random.normal(jax.random.PRNGKey(0), (256, 512))
     w = jax.random.normal(jax.random.PRNGKey(1), (512, 128))
     prog = build_matmul_program(256, 512, 128, PsramConfig())
-    us_vec = _time(execute, prog, x, w, n=5, warmup=1)
-    us_loop = _time(execute_reference, prog, x, w, n=3, warmup=1)
-    bit = bool(jnp.all(execute(prog, x, w) == execute_reference(prog, x, w)))
-    row("schedule_exec_vectorized", us_vec, f"bit_identical={bit}")
-    row("schedule_exec_loop_oracle", us_loop, "per-cycle PsramArray interpreter")
-    row("schedule_exec_speedup", 0.0, f"{us_loop / us_vec:.1f}x")
-    counts = count_cycles(prog)
-    mu = measured_utilization(prog)
-    row("schedule_exec_counted_cycles", 0.0,
-        f"{counts.compute_cycles} compute + {counts.write_cycles} write "
-        f"util={mu.utilization:.3f}")
+    us_vec = _time(execute, prog, x, w, n=5, warmup=1) \
+        if selected("psram-scheduled") else None
+    us_loop = _time(execute_reference, prog, x, w, n=3, warmup=1) \
+        if selected("psram-oracle") else None
+    if us_vec is not None:
+        derived = "vectorized executor"
+        if us_loop is not None:
+            bit = bool(jnp.all(
+                execute(prog, x, w) == execute_reference(prog, x, w)))
+            derived = f"bit_identical={bit}"
+        row("schedule_exec_vectorized", us_vec, derived, "psram-scheduled")
+    if us_loop is not None:
+        row("schedule_exec_loop_oracle", us_loop,
+            "per-cycle PsramArray interpreter", "psram-oracle")
+    if us_vec is not None and us_loop is not None:
+        row("schedule_exec_speedup", 0.0, f"{us_loop / us_vec:.1f}x",
+            "psram-scheduled")
+    if selected("psram-scheduled"):
+        counts = count_cycles(prog)
+        mu = measured_utilization(prog)
+        row("schedule_exec_counted_cycles", 0.0,
+            f"{counts.compute_cycles} compute + {counts.write_cycles} write "
+            f"util={mu.utilization:.3f}", "psram-scheduled")
 
 
 # --------------------------------------------------------- CP-ALS end2end
 def bench_cp_als():
     key = jax.random.PRNGKey(0)
     x, _ = lowrank_dense(key, (40, 36, 32), rank=4)
-    t0 = time.perf_counter()
-    st = cp_als(x, rank=4, n_iter=30, key=jax.random.PRNGKey(5))
-    us = (time.perf_counter() - t0) * 1e6
-    row("cp_als_float_30it", us, f"fit={st.fit:.4f}")
-    idx, vals = dense_to_coo(x)
-    t0 = time.perf_counter()
-    stq = cp_als_psram((idx, vals, x.shape), rank=4, n_iter=30,
-                       key=jax.random.PRNGKey(5))
-    us = (time.perf_counter() - t0) * 1e6
-    row("cp_als_psram_30it", us, f"fit={stq.fit:.4f} (8-bit+ADC engine)")
+    if selected("exact"):
+        t0 = time.perf_counter()
+        st = cp_als(x, rank=4, n_iter=30, key=jax.random.PRNGKey(5))
+        us = (time.perf_counter() - t0) * 1e6
+        row("cp_als_float_30it", us, f"fit={st.fit:.4f}", "exact")
+    if selected("psram-oracle"):
+        idx, vals = dense_to_coo(x)
+        t0 = time.perf_counter()
+        stq = cp_als_psram((idx, vals, x.shape), rank=4, n_iter=30,
+                           key=jax.random.PRNGKey(5))
+        us = (time.perf_counter() - t0) * 1e6
+        row("cp_als_psram_30it", us, f"fit={stq.fit:.4f} (8-bit+ADC engine)",
+            "psram-oracle")
 
 
 # ---------------------------------------------------- energy (beyond-paper)
@@ -201,7 +234,7 @@ def bench_sparse_mttkrp(smoke: bool = False):
     size = shape[0] * shape[1] * shape[2]
     densities = (1e-4, 1e-3) if smoke else (1e-5, 1e-4, 1e-3)
     rank = 32
-    for dens in densities:
+    for dens in densities if selected("psram-stream") else ():
         nnz = max(1000, int(size * dens))
         coo = powerlaw_coo(jax.random.PRNGKey(0), shape, nnz=nnz,
                            rank=8, alpha=1.1)
@@ -222,7 +255,8 @@ def bench_sparse_mttkrp(smoke: bool = False):
         agree = measured.utilization / max(model.utilization, 1e-30)
         row(f"sparse_mttkrp_d{dens:g}_nnz{coo.nnz}", us,
             f"bit_identical={bit} cycles={counts.total_cycles} "
-            f"util={measured.utilization:.4f} model_agree={agree:.3f}")
+            f"util={measured.utilization:.4f} model_agree={agree:.3f}",
+            "psram-stream")
     # modeled §V-A-scale sparse sustained rate from the distribution alone
     from repro.sparse import powerlaw_fiber_lengths
     f = powerlaw_fiber_lengths(0, 10**6 if not smoke else 10**4,
@@ -231,6 +265,44 @@ def bench_sparse_mttkrp(smoke: bool = False):
     sb = sustained_mttkrp(cfg, SparseMTTKRPWorkload(fiber_lengths=f, rank=32))
     row("sparse_sustained_powerlaw", 0.0,
         f"{sb.sustained_petaops:.4f} PetaOps occ={sb.wavelength_occupancy:.3f}")
+
+
+# ------------------------------------------ backend matrix (registry tour)
+def bench_backend_matrix(smoke: bool = False):
+    """One MTTKRP across every registered backend via repro.api: wall-clock,
+    relative error vs "exact", and the backend's own utilization estimate —
+    the machine-readable version of examples/backend_tour.py. Scoped by
+    --backend."""
+    from repro import api, backends
+
+    shape, rank = ((24, 20, 16) if smoke else (48, 40, 32)), 8
+    x = jax.random.normal(jax.random.PRNGKey(0), shape)
+    fs = tuple(
+        jax.random.normal(jax.random.PRNGKey(d + 1), (s, rank))
+        for d, s in enumerate(shape)
+    )
+    want = api.mttkrp(x, fs, 0, backend="exact")
+    wl = MTTKRPWorkload(i=shape[0], j=shape[1], k=shape[2], rank=rank)
+    for name in backends.list_backends():
+        if not selected(name):
+            continue
+        be = backends.get(name)
+        caps = be.capabilities()
+        if caps.executes:
+            n = 1 if name == "psram-oracle" else 3  # the loop oracle is slow
+            us = _time(lambda: be.mttkrp(x, fs, 0), n=n, warmup=1)
+            got = be.mttkrp(x, fs, 0)
+            rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+            derived = f"rel_err={rel:.4f} (tol {caps.rel_tol:g})"
+        else:
+            us, derived = 0.0, "cost-only"
+        if caps.cost_model:
+            try:
+                est = api.estimate(wl, backend=be)
+                derived += f" est_util={est.utilization:.4f}"
+            except backends.CapabilityError:
+                pass  # e.g. psram-stream prices sparse distributions only
+        row(f"backend_matrix_{name}", us, derived, name)
 
 
 # --------------------------------------------- multi-array engine scaling
@@ -245,24 +317,38 @@ def bench_scaling():
 
 
 def main(argv=None) -> None:
+    from repro import backends
+
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows as JSON (e.g. BENCH_psram.json)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: modeled rows + a reduced sparse sweep, "
                          "skip the slow wall-clock benches")
+    ap.add_argument("--backend", action="append", default=None,
+                    metavar="NAME", choices=backends.list_backends(),
+                    help="scope the run to benches exercising this backend "
+                         "(repeatable; default: all registered)")
     args = ap.parse_args(argv)
-    print("name,us_per_call,derived")
+    global SELECTED
+    SELECTED = set(args.backend) if args.backend else None
+    print("name,us_per_call,derived,backend")
     bench_fig5_channels()
     bench_fig5_frequency()
     bench_headline()
     if not args.smoke:
-        bench_mttkrp_paths()
-        bench_psram_matmul()
-        bench_schedule_executor()
-        bench_cp_als()
+        if selected("exact", "pallas", "analytical"):
+            bench_mttkrp_paths()
+        if selected("pallas"):
+            bench_psram_matmul()
+        if selected("psram-scheduled", "psram-oracle"):
+            bench_schedule_executor()
+        if selected("exact", "psram-oracle"):
+            bench_cp_als()
     bench_energy()
-    bench_sparse_mttkrp(smoke=args.smoke)
+    if selected("psram-stream", "analytical"):
+        bench_sparse_mttkrp(smoke=args.smoke)
+    bench_backend_matrix(smoke=args.smoke)
     bench_scaling()
     if args.json:
         with open(args.json, "w") as f:

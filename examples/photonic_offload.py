@@ -25,7 +25,7 @@ from repro.core.schedule import (
 )
 from repro.kernels.ops import psram_matmul_op
 from repro.models.registry import get_config, get_module
-from repro.serve.engine import photonic_offload_report
+from repro.serve.engine import offload_report
 
 
 def main():
@@ -75,9 +75,11 @@ def main():
           f"(@ {peak_petaops(arr):.1f} PetaOps)")
 
     # schedule-derived bill for one decode step of the reduced model: the
-    # serve engine builds one tile program per projection and counts it
-    rep = photonic_offload_report(cfg)
-    print(f"\nserve offload report ({cfg.name}, batch 1): "
+    # serve engine prices one MatmulWorkload per unique projection shape
+    # through api.estimate on the selected backend
+    rep = offload_report(cfg, backend="psram-scheduled")
+    print(f"\nserve offload report ({cfg.name}, batch 1, "
+          f"backend={rep['backend']}): "
           f"{rep['time_s']*1e6:.1f} us/step, "
           f"{rep['energy'].total_j*1e6:.2f} uJ, "
           f"utilization {rep['utilization'].utilization:.4f} "

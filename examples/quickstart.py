@@ -2,21 +2,21 @@
 
 1. Build a synthetic low-rank 3-mode tensor.
 2. Run CP-ALS with the exact float MTTKRP.
-3. Run CP-ALS again with MTTKRP executed through the pSRAM array numerics
-   (8-bit intensity inputs, binary bitcells, ADC) — the paper's engine.
-4. Compare fits and print what the predictive performance model says the
-   array would sustain on this workload (and the paper's 17 PetaOps point).
+3. Run CP-ALS again with the MTTKRP dispatched *by backend name* through
+   the unified registry (``backend="psram-oracle"`` — 8-bit intensity
+   inputs, binary bitcells, ADC): the paper's engine as one line.
+4. Compare fits and ask ``repro.api.estimate`` what the predictive
+   performance model says the array would sustain on this workload (and
+   the paper's 17 PetaOps point).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 
-from repro.core.cp_als import cp_als, cp_als_psram
+from repro import api
+from repro.core.cp_als import cp_als
 from repro.core.mttkrp import dense_to_coo
-from repro.core.perf_model import (
-    MTTKRPWorkload, peak_petaops, sustained_mttkrp, time_to_solution_s,
-)
-from repro.core.psram import PsramConfig
+from repro.core.perf_model import MTTKRPWorkload, peak_petaops
 from repro.data.tensors import lowrank_dense
 
 
@@ -30,21 +30,26 @@ def main():
     print(f"float CP-ALS      fit={st_f.fit:.4f} ({st_f.iters} iters)")
 
     idx, vals = dense_to_coo(x)
-    st_q = cp_als_psram((idx, vals, shape), rank=rank, n_iter=40,
-                        key=jax.random.PRNGKey(1))
-    print(f"pSRAM CP-ALS      fit={st_q.fit:.4f} (8-bit + ADC engine)")
+    st_q = cp_als(None, rank=rank, n_iter=40, coo=(idx, vals, shape),
+                  backend="psram-oracle", key=jax.random.PRNGKey(1))
+    print(f"pSRAM CP-ALS      fit={st_q.fit:.4f} (backend='psram-oracle': "
+          "8-bit + ADC engine, fit computed exactly)")
     print(f"quantization gap  {st_f.fit - st_q.fit:+.4f}")
 
-    cfg = PsramConfig()  # 256x32 words, 52 channels, 20 GHz (paper §V-A)
+    # one facade, one workload union: estimate without running
     wl = MTTKRPWorkload(i=shape[0], j=shape[1], k=shape[2], rank=rank)
-    sb = sustained_mttkrp(cfg, wl)
+    sb = api.estimate(wl, backend="analytical")
+    big = api.estimate(MTTKRPWorkload(), backend="analytical")
+    cfg = sb.config  # paper §V-A array: 256x32 words, 52 channels, 20 GHz
     print(f"\npredictive performance model @ paper operating point:")
-    big = sustained_mttkrp(cfg, MTTKRPWorkload())
     print(f"  peak            {peak_petaops(cfg):6.2f} PetaOps (paper: 17)")
     print(f"  sustained       {big.sustained_petaops:6.2f} PetaOps on the paper's 1e6^3 MTTKRP")
     print(f"  this tiny tensor{sb.sustained_petaops:6.2f} PetaOps (reconfig-bound: "
-          f"eff={sb.reconfig_efficiency:.3f})")
-    print(f"  time-to-solution{time_to_solution_s(cfg, wl)*1e9:6.1f} ns per MTTKRP")
+          f"eff={sb.breakdown.reconfig_efficiency:.3f})")
+    print(f"  time-to-solution{sb.time_s*1e9:6.1f} ns per MTTKRP")
+    counted = api.estimate(wl, backend="psram-scheduled")
+    print(f"  counted cycles  {counted.counts.total_cycles} "
+          f"({'agrees with analytical' if counted.utilization == sb.utilization else 'diverges'})")
 
 
 if __name__ == "__main__":

@@ -21,7 +21,7 @@ Run:  PYTHONPATH=src python examples/sparse_decompose.py
 import jax
 import numpy as np
 
-from repro.core.cp_als import cp_als, cp_als_psram
+from repro.core.cp_als import cp_als
 from repro.core.perf_model import SparseMTTKRPWorkload, sustained_mttkrp
 from repro.core.psram import PsramConfig
 from repro.core.schedule import count_cycles, program_energy
@@ -44,12 +44,15 @@ def main():
     print(f"fiber lengths: mean={stats.mean:.1f} p50={stats.p50:.0f} "
           f"p99={stats.p99:.0f} max={stats.max} — power-law skew")
 
-    # --- decompose: exact streaming backend, then the quantized engine
+    # --- decompose: exact streaming backend, then the quantized engine —
+    # the same cp_als call, dispatched by registry name
     st = cp_als(None, rank=rank, n_iter=20, sparse=coo,
                 key=jax.random.PRNGKey(1), tol=0)
-    stq = cp_als_psram(coo, rank=rank, n_iter=20, key=jax.random.PRNGKey(1))
+    stq = cp_als(None, rank=rank, n_iter=20, sparse=coo,
+                 backend="psram-stream", key=jax.random.PRNGKey(1))
     print(f"CP-ALS fit: float={st.fit:.4f}  pSRAM 8-bit+ADC={stq.fit:.4f} "
-          "(both fits computed exactly — lossy backend, unbiased metric)")
+          "(backend='psram-stream'; both fits computed exactly — lossy "
+          "backend, unbiased metric)")
 
     # --- price the schedule that ran
     cfg = PsramConfig()

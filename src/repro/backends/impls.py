@@ -1,0 +1,308 @@
+"""First-class backends wrapping every existing execution path.
+
+=================  =========================================================
+name               wraps
+=================  =========================================================
+``exact``          float einsum / COO segment-sum — the parity baseline
+``psram-oracle``   per-cycle :class:`PsramArray` physics (matmul) and the
+                   flat quantized CP chain (sparse MTTKRP) — slow, faithful
+``psram-scheduled``the tile-schedule IR: vectorized executor for matmuls
+                   and the §IV dense mapping (matricized MTTKRP as an array
+                   matmul); counted-cycle cost model
+``psram-stream``   the nonzero-streaming sparse schedule (repro.sparse):
+                   quantized chain + gather-mask drains; fiber-distribution
+                   cost model
+``pallas``         the Pallas TPU kernels (interpret mode on CPU): bit-plane
+                   matmul, fused dense MTTKRP, blocked segment-sum stream
+``analytical``     the closed-form §V model — cost-only, never executes
+=================  =========================================================
+
+Numeric contracts the parity suite (tests/test_backends.py) enforces:
+``psram-oracle`` and ``psram-scheduled`` matmuls are *bit-identical* (PR 2);
+``psram-stream`` equals ``mttkrp_sparse_psram`` on the sorted stream (PR 3);
+every lossy backend lands within its documented ``rel_tol`` of ``exact``;
+and ``analytical``'s §V-A dense breakdown equals ``psram-scheduled``'s
+counted cycles exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .base import Backend, Capabilities, CapabilityError, Estimate, register
+from .workload import (
+    MatmulWorkload,
+    NormalizedMTTKRP,
+    describe,
+    mode_csf,
+    normalize_mttkrp_data,
+    to_coo_triple,
+)
+
+
+def _program_estimate(name, cfg, program, workload) -> Estimate:
+    """Estimate from a schedule (the counted-cycle pricing every scheduled
+    backend shares)."""
+    from repro.core.perf_model import breakdown_from_counts
+    from repro.core.schedule import count_cycles, program_energy
+
+    counts = count_cycles(program)
+    return Estimate(
+        backend=name,
+        config=cfg,
+        workload=workload,
+        breakdown=breakdown_from_counts(cfg, counts),
+        time_s=counts.duration_s(cfg),
+        counts=counts,
+        energy=program_energy(program),
+    )
+
+
+def _matmul_program(cfg, wl: MatmulWorkload):
+    from repro.core.schedule import build_matmul_program
+
+    prog = build_matmul_program(wl.m, wl.k, wl.n, cfg)
+    if wl.repeats != 1:
+        prog = dataclasses.replace(prog, repeats=wl.repeats)
+    return prog
+
+
+class _SchedulePricing:
+    """cost() shared by the two dense schedule backends: the canonical §IV/§V
+    programs, counted."""
+
+    def cost(self, workload) -> Estimate:
+        from repro.core.perf_model import MTTKRPWorkload
+        from repro.core.schedule import build_mttkrp_program
+
+        workload = describe(workload)
+        if isinstance(workload, MatmulWorkload):
+            return _program_estimate(
+                self.name, self.config, _matmul_program(self.config, workload),
+                workload)
+        if isinstance(workload, MTTKRPWorkload):
+            return _program_estimate(
+                self.name, self.config,
+                build_mttkrp_program(self.config, workload), workload)
+        raise CapabilityError(
+            f"backend {self.name!r} prices dense schedules; use "
+            "'psram-stream' or 'analytical' for sparse workloads"
+        )
+
+
+@register("exact")
+class ExactBackend(Backend):
+    """Float reference numerics — the baseline every backend is compared to."""
+
+    def capabilities(self) -> Capabilities:
+        return Capabilities(
+            executes=True, cost_model=False, matmul=True,
+            description="exact float einsum / COO segment-sum",
+        )
+
+    def matmul(self, x, w):
+        return jnp.asarray(x, jnp.float32) @ jnp.asarray(w, jnp.float32)
+
+    def mttkrp(self, data, factors, mode: int):
+        from repro.core.mttkrp import mttkrp_dense, mttkrp_sparse
+
+        norm = normalize_mttkrp_data(data)
+        if norm.kind == "dense":
+            return mttkrp_dense(norm.dense, list(factors), mode)
+        idx, vals, shape = to_coo_triple(norm)
+        return mttkrp_sparse(idx, vals, tuple(factors), mode, shape[mode])
+
+
+@register("psram-oracle")
+class PsramOracleBackend(Backend):
+    """The array physics, op by op: ``execute_reference`` for matmuls, the
+    flat quantized CP chain (``mttkrp_sparse_psram``) for MTTKRP — the
+    slowest and most transparently faithful substrate."""
+
+    def capabilities(self) -> Capabilities:
+        return Capabilities(
+            executes=True, cost_model=True, matmul=True, lossy=True,
+            rel_tol=0.05, prices=("dense", "matmul"),
+            description="per-cycle PsramArray interpreter / quantized chain",
+        )
+
+    def matmul(self, x, w):
+        from repro.core.schedule import build_matmul_program, execute_reference
+
+        m, k = x.shape
+        n = w.shape[1]
+        return execute_reference(build_matmul_program(m, k, n, self.config), x, w)
+
+    def mttkrp(self, data, factors, mode: int):
+        from repro.core.mttkrp import mttkrp_sparse_psram
+
+        idx, vals, shape = to_coo_triple(normalize_mttkrp_data(data))
+        return mttkrp_sparse_psram(
+            idx, vals, tuple(factors), mode, shape[mode],
+            adc_bits=self.config.adc.bits,
+        )
+
+    cost = _SchedulePricing.cost
+
+
+@register("psram-scheduled")
+class PsramScheduledBackend(Backend):
+    """The tile-schedule IR's vectorized executor (§IV dense mapping).
+
+    MTTKRP runs as the matricized matmul ``X_(n) @ KhatriRao(others)``
+    through the array — weights stationary, inputs WDM-batched — which is
+    bit-identical to the per-cycle oracle on the same program (PR 2) and
+    lands within the ADC envelope of ``exact``.
+    """
+
+    def capabilities(self) -> Capabilities:
+        return Capabilities(
+            executes=True, cost_model=True, matmul=True, sparse=False,
+            lossy=True, rel_tol=0.05, prices=("dense", "matmul"),
+            description="vectorized tile-schedule executor (dense mapping)",
+        )
+
+    def matmul(self, x, w):
+        from repro.core.schedule import build_matmul_program, execute
+
+        m, k = x.shape
+        n = w.shape[1]
+        return execute(build_matmul_program(m, k, n, self.config), x, w)
+
+    def mttkrp(self, data, factors, mode: int):
+        from repro.core.mttkrp import khatri_rao, matricize
+
+        norm = normalize_mttkrp_data(data)
+        self._require("sparse MTTKRP (use 'psram-stream')",
+                      norm.kind == "dense")
+        others = [factors[d] for d in range(norm.dense.ndim) if d != mode]
+        return self.matmul(matricize(norm.dense, mode), khatri_rao(others))
+
+    cost = _SchedulePricing.cost
+
+
+@register("psram-stream")
+class PsramStreamBackend(Backend):
+    """The nonzero-streaming sparse schedule (repro.sparse.stream): blocks
+    of quantized CP2 chain rows stored down the word-lines, per-output-row
+    gather masks driven per WDM channel, electrical cross-block carry.
+    Dense data is accepted by COO-ifying (all entries stream as nonzeros)."""
+
+    def capabilities(self) -> Capabilities:
+        return Capabilities(
+            executes=True, cost_model=True, matmul=False, lossy=True,
+            rel_tol=0.05, prices=("sparse",), prefers_csf=True,
+            description="nonzero-streaming sparse schedule (quantized chain)",
+        )
+
+    def mttkrp(self, data, factors, mode: int):
+        from repro.sparse.stream import stream_mttkrp
+
+        csf = mode_csf(normalize_mttkrp_data(data), mode)
+        return stream_mttkrp(
+            csf, tuple(factors), self.config,
+            psram=True, adc_bits=self.config.adc.bits,
+        )
+
+    def cost(self, workload) -> Estimate:
+        from repro.core.perf_model import SparseMTTKRPWorkload
+        from repro.sparse.stream import build_stream_program
+
+        workload = describe(workload)
+        if not isinstance(workload, SparseMTTKRPWorkload):
+            raise CapabilityError(
+                "backend 'psram-stream' prices fiber-length distributions "
+                "(SparseMTTKRPWorkload); use 'psram-scheduled' or "
+                "'analytical' for dense descriptors"
+            )
+        prog = build_stream_program(
+            workload.fiber_lengths, workload.rank, self.config)
+        return _program_estimate(self.name, self.config, prog, workload)
+
+
+@register("pallas")
+class PallasBackend(Backend):
+    """The Pallas TPU kernels (interpret mode off-TPU, same kernel body):
+    bit-plane pSRAM matmul, fused dense MTTKRP, blocked segment-sum stream.
+    The blocked stream reassociates float adds, so this backend is allclose
+    — not bit-equal — to its oracles (``bit_exact=False``)."""
+
+    def __init__(self, config=None, lowering: str = "auto"):
+        super().__init__(config)
+        from .lowering import resolve_lowering
+
+        # resolve once at construction so a bad string fails fast
+        resolve_lowering(lowering)
+        self.lowering = lowering
+
+    def capabilities(self) -> Capabilities:
+        return Capabilities(
+            executes=True, cost_model=False, matmul=True, lossy=True,
+            bit_exact=False, rel_tol=0.05, prefers_csf=True,
+            description="Pallas kernels (bit-plane matmul, fused/blocked MTTKRP)",
+        )
+
+    def matmul(self, x, w):
+        from repro.kernels.ops import psram_matmul_op
+
+        return psram_matmul_op(
+            x, w, adc_bits=self.config.adc.bits, backend=self.lowering)
+
+    def mttkrp(self, data, factors, mode: int):
+        norm = normalize_mttkrp_data(data)
+        if norm.kind == "dense":
+            from repro.kernels.ops import mttkrp_op
+
+            self._require("N-mode dense MTTKRP (3-mode kernel)",
+                          norm.dense.ndim == 3)
+            others = [d for d in range(3) if d != mode]
+            xt = jnp.transpose(norm.dense, [mode] + others)
+            return mttkrp_op(xt, factors[others[0]], factors[others[1]],
+                             backend=self.lowering)
+        from repro.sparse.stream import stream_mttkrp_blocked
+
+        csf = mode_csf(norm, mode)
+        return stream_mttkrp_blocked(
+            csf, tuple(factors), self.config, backend=self.lowering)
+
+
+@register("analytical")
+class AnalyticalBackend(Backend):
+    """The closed-form §V predictive model — cost-only. Asking it to execute
+    raises :class:`CapabilityError` (the registry's documented error path);
+    its §V-A dense breakdown equals ``psram-scheduled``'s counted cycles
+    exactly (the PR 2/3 invariant, asserted in tests/test_backends.py)."""
+
+    def capabilities(self) -> Capabilities:
+        return Capabilities(
+            executes=False, cost_model=True, matmul=False,
+            prices=("dense", "sparse", "matmul"),
+            description="closed-form §V sustained-performance model",
+        )
+
+    def cost(self, workload) -> Estimate:
+        from repro.core.perf_model import (
+            MTTKRPWorkload,
+            mttkrp_energy,
+            sustained_mttkrp,
+        )
+
+        workload = describe(workload)
+        if isinstance(workload, MatmulWorkload):
+            # the analytical model of one matmul IS its canonical schedule
+            return _program_estimate(
+                self.name, self.config, _matmul_program(self.config, workload),
+                workload)
+        sb = sustained_mttkrp(self.config, workload)
+        rate = sb.sustained_petaops * 1e15
+        return Estimate(
+            backend=self.name,
+            config=self.config,
+            workload=workload,
+            breakdown=sb,
+            time_s=2.0 * workload.macs / rate if rate > 0 else float("inf"),
+            counts=None,
+            energy=mttkrp_energy(self.config, workload)
+            if isinstance(workload, MTTKRPWorkload) else None,
+        )

@@ -1,0 +1,36 @@
+"""Kernel lowering selection — the registry-owned home of the strings that
+used to live privately in ``kernels.ops``.
+
+The Pallas ops pick between three lowerings of the same kernel body:
+
+* ``"pallas"``    — real Pallas lowering (TPU).
+* ``"interpret"`` — the same kernel body, Python-executed (CPU validation).
+* ``"ref"``       — the pure-jnp oracle from ``kernels.ref``.
+
+``"auto"`` resolves by the runtime backend. Before this module, an unknown
+string silently fell through to the Pallas path; now it raises with the
+valid set, and the registry's ``"pallas"`` backend and ``kernels.ops`` share
+one resolver.
+"""
+from __future__ import annotations
+
+import jax
+
+KERNEL_LOWERINGS = ("auto", "pallas", "interpret", "ref")
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_lowering(backend: str = "auto") -> str:
+    """Resolve a kernel-op ``backend`` string to ``"pallas"`` | ``"interpret"``
+    | ``"ref"`` (``"auto"`` picks Pallas on TPU, interpret elsewhere)."""
+    if backend not in KERNEL_LOWERINGS:
+        raise ValueError(
+            f"unknown kernel lowering {backend!r}; valid: "
+            f"{', '.join(KERNEL_LOWERINGS)}"
+        )
+    if backend == "auto":
+        return "pallas" if on_tpu() else "interpret"
+    return backend

@@ -3,22 +3,28 @@ alternating least squares, with MTTKRP as the inner kernel.
 
 Each mode update solves  A_n <- MTTKRP_n(X, factors) @ pinv(hadamard of grams)
 followed by column normalization; fit is tracked against ||X||. The MTTKRP
-backend is pluggable: exact float, pSRAM-quantized, sparse COO, a
-``repro.sparse`` container (CSF streamed through the pSRAM tile schedule),
-or the Pallas TPU kernel — this is how the paper's engine slots into the
-framework as a first-class feature. Lossy backends get an exact convergence
-metric via ``exact_fit`` (the factor updates stay on the engine under test;
-only the fit inner product is recomputed exactly).
+engine is pluggable through the unified backend registry
+(``repro.backends``): pass ``backend="psram-stream"`` (or any registered
+name — ``"exact"``, ``"psram-oracle"``, ``"psram-scheduled"``, ``"pallas"``)
+and the factor updates run on that substrate, whatever form the data takes
+(dense array, COO triple, or a ``repro.sparse`` container). A bare callable
+is still accepted via a deprecation adapter (the pre-registry
+``mttkrp_fn=`` contract). Lossy backends get an exact convergence metric
+via ``exact_fit`` (the factor updates stay on the engine under test; only
+the fit inner product is recomputed exactly).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from .mttkrp import khatri_rao, mttkrp_dense, mttkrp_sparse, mttkrp_sparse_psram
+from .mttkrp import khatri_rao, mttkrp_dense, mttkrp_sparse
+from .psram import PsramConfig
+from .quantization import ADCConfig
 
 
 @dataclasses.dataclass
@@ -53,11 +59,60 @@ def _gram_hadamard(factors, skip):
     return out
 
 
+def _resolve_backend(backend, config):
+    """Turn ``backend`` (registry name | Backend instance | bare callable)
+    into ``(callable_fn, registry_backend)`` — exactly one is non-None.
+
+    The callable form is the deprecation adapter for the pre-registry
+    ``mttkrp_fn=`` contract (same signature, ``fn(x_or_none, factors,
+    mode)``) — prefer a registered backend name.
+    """
+    from repro import backends as _backends
+
+    if callable(backend) and not isinstance(backend, (str, _backends.Backend)):
+        if config is not None:
+            raise ValueError(
+                "config= has no effect on a bare-callable backend (the "
+                "callable closes over its own engine); pass a registry name "
+                "or drop config="
+            )
+        return backend, None
+    be = _backends.get(backend, config)
+    caps = be.capabilities()
+    if not caps.executes:
+        raise _backends.CapabilityError(
+            f"backend {be.name!r} is cost-only and cannot drive CP-ALS "
+            "factor updates; pick an executable backend "
+            f"({', '.join(n for n in _backends.list_backends() if _backends.get(n).capabilities().executes)})"
+        )
+    return None, be
+
+
+def _csf_cache(get_triple):
+    """Per-mode CSF builder over a lazily-materialized COO triple: the
+    host-side sort happens once per mode, not once per ALS sweep."""
+    state: dict = {}
+
+    def data_for(m: int):
+        from repro.sparse.formats import COO, csf_for_mode
+
+        if "coo" not in state:
+            idx, vals, shp = get_triple()
+            state["coo"] = COO(indices=idx, values=vals, shape=shp)
+        if m not in state:
+            state[m] = csf_for_mode(state["coo"], m)
+        return state[m]
+
+    return data_for
+
+
 def cp_als(
     x: jax.Array | None,
     rank: int,
     n_iter: int = 25,
     key: jax.Array | None = None,
+    backend=None,
+    config: PsramConfig | None = None,
     mttkrp_fn: Callable | None = None,
     coo: tuple[jax.Array, jax.Array, tuple[int, ...]] | None = None,
     sparse=None,
@@ -67,23 +122,53 @@ def cp_als(
 ) -> CPState:
     """Run CP-ALS on ``x`` (dense), ``coo=(indices, values, shape)``, or
     ``sparse`` — any ``repro.sparse.formats`` container (COO/SortedCOO/
-    BlockedCOO/CSF). A container runs the streaming pSRAM schedule of
-    ``repro.sparse.stream`` as the MTTKRP backend (one mode-rooted CSF per
-    mode, built once).
+    BlockedCOO/CSF).
 
-    mttkrp_fn(x_or_none, factors, mode) -> (I_mode, R); defaults to the
-    exact dense path / sparse segment-sum path / streamed CSF path.
+    ``backend`` selects the MTTKRP engine by registry name
+    (``repro.backends``): ``"exact"``, ``"psram-oracle"``,
+    ``"psram-scheduled"``, ``"psram-stream"``, ``"pallas"`` — or a prebuilt
+    :class:`~repro.backends.Backend`; ``config`` is its ``PsramConfig``
+    (default: the paper §V-A array). ``None`` keeps the exact default path
+    for the given data form (dense einsum / COO segment-sum / streamed CSF).
+    A bare callable is still accepted as a deprecation adapter with the
+    pre-registry contract ``fn(x_or_none, factors, mode) -> (I_mode, R)``
+    — it receives the dense ``x`` (or None for coo/sparse data), exactly as
+    ``mttkrp_fn=`` always did (that spelling still works and warns).
 
     ``exact_fit`` controls the convergence metric: the inner-product fit
     trick reuses the backend's last-mode MTTKRP, so a *lossy* backend (the
-    pSRAM-quantized engine, a custom ``mttkrp_fn``) biases the reported fit
+    pSRAM-quantized engine, a custom callable) biases the reported fit
     — the tracked quantity drifts from ``1 - ||X - X̂||/||X||``. With
-    ``exact_fit`` (default: on whenever ``mttkrp_fn`` is supplied), the fit
-    inner product is recomputed with the exact sparse/dense path each sweep
-    while the factor updates still come from the backend under test.
+    ``exact_fit`` (default: on whenever a backend/callable is supplied),
+    the fit inner product is recomputed with the exact sparse/dense path
+    each sweep while the factor updates still come from the engine under
+    test.
     """
     if key is None:
         key = jax.random.PRNGKey(0)
+    if mttkrp_fn is not None:
+        if backend is not None:
+            raise ValueError("pass either backend= or (deprecated) mttkrp_fn=")
+        warnings.warn(
+            "cp_als(mttkrp_fn=...) is deprecated; pass backend=<registry "
+            "name> (or the callable itself via backend=)",
+            DeprecationWarning, stacklevel=2,
+        )
+        backend = mttkrp_fn
+    if backend is None and config is not None:
+        raise ValueError(
+            "config= selects the backend's array config and needs backend=; "
+            "the default exact paths don't touch a PsramConfig"
+        )
+    callable_fn = be = None
+    lossy = None
+    if backend is not None:
+        callable_fn, be = _resolve_backend(backend, config)
+        lossy = True if callable_fn is not None else be.capabilities().lossy
+    # a backend that sorts into a mode-rooted CSF per call (psram-stream,
+    # pallas sparse) must see prebuilt per-mode CSFs, or every sweep re-sorts
+    # the nonzeros — mirror the sparse branch's lazy cache for coo/dense too
+    wants_csf = be is not None and be.capabilities().prefers_csf
     exact_last_mode_fn = None
     if sparse is not None:
         if coo is not None or x is not None:
@@ -100,9 +185,9 @@ def cp_als(
         shape = tuple(base.shape)
         norm_x = jnp.linalg.norm(base.values)
         # per-mode CSFs are the expensive host-side preprocessing: callers
-        # that already built them (cp_als_psram) pass them through, and a
-        # custom mttkrp_fn only ever needs the last mode (exact_fit), so
-        # build lazily on first use
+        # that already built them pass csfs= through, and a callable backend
+        # only ever needs the last mode (exact_fit), so build lazily on
+        # first use and share the cache with the registry backend
         built: dict = {}
 
         def mode_csf(m):
@@ -114,6 +199,7 @@ def cp_als(
 
         default_fn = lambda _, fs, m: stream_mttkrp(mode_csf(m), tuple(fs))
         exact_last_mode_fn = default_fn
+        backend_data = mode_csf          # a backend sees the per-mode CSF
     elif coo is not None:
         indices, values, shape = coo
         norm_x = jnp.linalg.norm(values)
@@ -121,14 +207,32 @@ def cp_als(
             indices, values, tuple(fs), m, shape[m]
         )
         exact_last_mode_fn = default_fn
+        if wants_csf:
+            backend_data = _csf_cache(
+                lambda: (indices, values, tuple(shape)))
+        else:
+            backend_data = lambda m: (indices, values, tuple(shape))
     else:
         shape = x.shape
         norm_x = jnp.linalg.norm(x)
         default_fn = lambda t, fs, m: mttkrp_dense(t, fs, m)
         exact_last_mode_fn = default_fn
-    fn = mttkrp_fn or default_fn
+        if wants_csf:
+            from .mttkrp import dense_to_coo
+
+            backend_data = _csf_cache(
+                lambda: (*dense_to_coo(x), tuple(x.shape)))
+        else:
+            backend_data = lambda m: x
+    if callable_fn is not None:
+        fn = callable_fn      # legacy contract: fn(x_or_none, factors, mode)
+    elif be is not None:
+        fn = lambda _, fs, m: be.mttkrp(backend_data(m), tuple(fs), m)
+    else:
+        fn = default_fn
     if exact_fit is None:
-        exact_fit = mttkrp_fn is not None
+        # a lossy engine biases the inner-product fit; exact engines don't
+        exact_fit = bool(lossy)
 
     factors = init_factors(key, tuple(shape), rank)
     lam = jnp.ones((rank,))
@@ -168,26 +272,24 @@ def cp_als_psram(
 ) -> CPState:
     """CP-ALS with the MTTKRP kernel running through the pSRAM numerics.
 
-    ``coo`` is either the raw ``(indices, values, shape)`` triple (flat
-    quantized path) or a ``repro.sparse`` container (COO/SortedCOO/
-    BlockedCOO/CSF), which runs the *streaming* schedule with the quantized
-    chain — the full §IV array mapping. Either way the reported fit is the
-    exact one (``exact_fit``): factor updates see the lossy engine, the
-    convergence metric does not.
+    ``coo`` is either the raw ``(indices, values, shape)`` triple — the flat
+    quantized path, i.e. ``backend="psram-oracle"`` — or a ``repro.sparse``
+    container (COO/SortedCOO/BlockedCOO/CSF), which runs the *streaming*
+    schedule with the quantized chain (``backend="psram-stream"``), the full
+    §IV array mapping. Thin convenience wrapper over
+    ``cp_als(backend=...)``; either way the reported fit is the exact one
+    (``exact_fit``): factor updates see the lossy engine, the convergence
+    metric does not.
     """
+    from repro.backends import resolve_config
+
+    cfg = dataclasses.replace(
+        resolve_config(None), adc=ADCConfig(bits=adc_bits))
     if isinstance(coo, tuple):
-        indices, values, shape = coo
-        fn = lambda _, fs, m: mttkrp_sparse_psram(
-            indices, values, tuple(fs), m, shape[m], adc_bits=adc_bits
-        )
-        return cp_als(None, rank, n_iter=n_iter, key=key, mttkrp_fn=fn, coo=coo)
-    from repro.sparse.formats import CSF, csf_for_mode
-    from repro.sparse.stream import stream_mttkrp
+        return cp_als(None, rank, n_iter=n_iter, key=key, coo=coo,
+                      backend="psram-oracle", config=cfg)
+    from repro.sparse.formats import CSF
 
     base = coo.to_coo() if isinstance(coo, CSF) else coo
-    csfs = [csf_for_mode(base, m) for m in range(len(base.shape))]
-    fn = lambda _, fs, m: stream_mttkrp(
-        csfs[m], tuple(fs), psram=True, adc_bits=adc_bits
-    )
-    return cp_als(None, rank, n_iter=n_iter, key=key, mttkrp_fn=fn,
-                  sparse=base, csfs=csfs)
+    return cp_als(None, rank, n_iter=n_iter, key=key, sparse=base,
+                  backend="psram-stream", config=cfg)

@@ -56,7 +56,9 @@ def cp1_on_array(b_row: jax.Array, c_row: jax.Array, config: PsramConfig | None 
     sum never mixes two elements: row r uses channel r mod wavelengths, and we
     issue ceil(R / wavelengths) optical cycles.
     """
-    cfg = config or PsramConfig()
+    from repro.backends.base import resolve_config
+
+    cfg = resolve_config(config)
     r = b_row.shape[0]
     if r > cfg.rows:
         raise ValueError(f"rank {r} exceeds array rows {cfg.rows}")

@@ -181,9 +181,10 @@ def matmul_via_array(x: jax.Array, w: jax.Array, config: PsramConfig | None = No
     which is bit-identical to the per-cycle ``schedule.execute_reference``
     oracle (asserted in tests/test_schedule.py).
     """
+    from repro.backends.base import resolve_config
     from .schedule import build_matmul_program, execute
 
-    cfg = config or PsramConfig()
+    cfg = resolve_config(config)
     M, K = x.shape
     K2, N = w.shape
     assert K == K2

@@ -154,8 +154,9 @@ def build_matmul_program(m: int, k: int, n: int, config: PsramConfig | None = No
     weight block is written once, then up to ``wavelengths`` rows of the
     input ride the array per optical cycle on distinct channels.
     """
-    cfg = config or PsramConfig()
-    cfg.validate()
+    from repro.backends.base import resolve_config
+
+    cfg = resolve_config(config)
     if m < 1 or k < 1 or n < 1:
         raise ValueError(f"degenerate matmul {m}x{k}x{n}")
     ops = []

@@ -1,24 +1,25 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-Each op auto-selects: real Pallas lowering on TPU backends, interpret mode on
-CPU (bit-identical kernel body, Python-executed — used for validation), with
-the pure-jnp oracle from ref.py always available via backend="ref".
+Each op resolves its lowering through the backend registry's shared
+resolver (``repro.backends.lowering``): real Pallas on TPU, interpret mode
+on CPU (bit-identical kernel body, Python-executed — used for validation),
+and the pure-jnp oracle from ref.py via ``backend="ref"``. Unknown strings
+raise instead of silently taking the Pallas path (they used to). The
+registry's ``"pallas"`` backend wraps these ops for the unified
+``repro.api`` front door.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.backends.lowering import resolve_lowering
 from repro.core.quantization import quantize_symmetric
 from . import ref
 from .flash_attention import flash_attention
 from .mttkrp import mttkrp_fused
 from .psram_matmul import psram_matmul
 from .segment_sum import blocked_segment_sum
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def psram_matmul_op(
@@ -29,10 +30,11 @@ def psram_matmul_op(
     qw, sw = quantize_symmetric(w, axis=0)
     sx = sx.reshape(x.shape[0], 1)
     sw = sw.reshape(1, w.shape[1])
-    if backend == "ref":
+    low = resolve_lowering(backend)
+    if low == "ref":
         return ref.psram_matmul_ref(qx, qw, sx, sw, adc_bits=adc_bits)
-    interpret = backend == "interpret" or (backend == "auto" and not _on_tpu())
-    return psram_matmul(qx, qw, sx, sw, adc_bits=adc_bits, interpret=interpret)
+    return psram_matmul(qx, qw, sx, sw, adc_bits=adc_bits,
+                        interpret=low == "interpret")
 
 
 def mttkrp_op(
@@ -42,10 +44,10 @@ def mttkrp_op(
     """Dense mode-0 MTTKRP; x is the 3-mode tensor (I, J, K)."""
     i, j, k = x.shape
     x0 = x.reshape(i, j * k)
-    if backend == "ref":
+    low = resolve_lowering(backend)
+    if low == "ref":
         return ref.mttkrp_ref(x0, b, c)
-    interpret = backend == "interpret" or (backend == "auto" and not _on_tpu())
-    return mttkrp_fused(x0, b, c, bi=bi, bk=bk, interpret=interpret)
+    return mttkrp_fused(x0, b, c, bi=bi, bk=bk, interpret=low == "interpret")
 
 
 def blocked_segment_sum_op(
@@ -56,20 +58,21 @@ def blocked_segment_sum_op(
     ``data`` (B, bn, R) holds blocks of CP2 chain rows, ``seg_ids`` (B, bn)
     their block-local output-row segment; see kernels/segment_sum.py.
     """
-    if backend == "ref":
+    low = resolve_lowering(backend)
+    if low == "ref":
         return ref.blocked_segment_sum_ref(data, seg_ids, n_seg)
-    interpret = backend == "interpret" or (backend == "auto" and not _on_tpu())
-    return blocked_segment_sum(data, seg_ids, n_seg, interpret=interpret)
+    return blocked_segment_sum(data, seg_ids, n_seg,
+                               interpret=low == "interpret")
 
 
 def flash_attention_op(
     q, k, v, causal=True, softcap=0.0, scale=None, backend: str = "auto",
     bq: int = 128, bkv: int = 128,
 ) -> jax.Array:
-    if backend == "ref":
+    low = resolve_lowering(backend)
+    if low == "ref":
         return ref.attention_ref(q, k, v, causal=causal, softcap=softcap, scale=scale)
-    interpret = backend == "interpret" or (backend == "auto" and not _on_tpu())
     return flash_attention(
         q, k, v, causal=causal, softcap=softcap, scale=scale,
-        bq=bq, bkv=bkv, interpret=interpret,
+        bq=bq, bkv=bkv, interpret=low == "interpret",
     )

@@ -2,6 +2,7 @@ from .engine import (
     ServeEngine,
     make_prefill,
     make_serve_step,
+    offload_report,
     photonic_offload_report,
     sparse_offload_report,
 )

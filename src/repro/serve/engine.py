@@ -6,20 +6,20 @@ sampling. `make_serve_step` builds the bare decode step the dry-run lowers
 (one new token against a seq_len cache) — that is the function whose roofline
 the decode_32k / long_500k cells measure.
 
-`photonic_offload_report` prices offloading one decode step's projections
-onto the pSRAM engine by lowering each projection through the core.schedule
-tile IR: counted compute/write cycles, measured utilization, and §III-B
-energies — the serving-side consumer of the schedule accountant.
-`sparse_offload_report` does the same for a sparse MTTKRP workload via the
-nonzero-streaming schedule (repro.sparse), including nnz-balanced
-multi-array splits.
+`offload_report` prices offloading a workload onto the pSRAM engine through
+the unified backend registry (`repro.api.estimate`): one entry point for a
+decode step's projections (pass an ArchConfig), a dense MTTKRP descriptor,
+or a sparse fiber-length distribution (including nnz-balanced multi-array
+splits) — counted compute/write cycles, measured utilization, §III-B
+energies, and (for projections) the end-to-end fidelity of the selected
+backend. The pre-registry `photonic_offload_report` /
+`sparse_offload_report` names remain as deprecation adapters.
 """
 from __future__ import annotations
 
 import contextlib
-import dataclasses
+import warnings
 from collections import Counter
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -76,50 +76,100 @@ def _decode_projection_shapes(cfg, batch: int) -> list[tuple[int, int, int]]:
     return shapes
 
 
-def photonic_offload_report(cfg, batch: int = 1, psram_config=None, fidelity: bool = True):
-    """Schedule-derived cost of one decode step's projections on the array.
+def offload_report(workload, backend=None, config=None, *, batch: int = 1,
+                   fidelity: bool = True, rank: int = 32, n_arrays: int = 1):
+    """Cost of offloading ``workload`` onto the pSRAM engine, via the
+    backend registry (built on ``repro.api.estimate``).
 
-    Builds the §IV tile program for each projection matmul the decode step
-    issues (family-aware: see :func:`_decode_projection_shapes`), runs them
-    through the counted-cycle accountant, and prices them with the §III-B
-    device energies. With ``fidelity=True`` one representative projection is
-    actually executed on the vectorized executor to report the end-to-end
-    relative error of the 8-bit + ADC transfer function.
+    ``workload`` dispatches by type:
 
-    Returns a dict: cycles (CycleCounts), time_s, utilization
-    (SustainedBreakdown from counted cycles), energy (EnergyBreakdown),
-    projection_rel_err (float | None).
+    * an ``ArchConfig`` — one decode step's projection matmuls
+      (family-aware, see :func:`_decode_projection_shapes`), each priced as
+      a ``MatmulWorkload`` with the IR's ``repeats`` folding identical
+      layers. With ``fidelity=True`` one representative projection actually
+      runs on the selected backend to report the end-to-end relative error
+      of its transfer function (skipped when the backend can't execute).
+    * a ``SparseMTTKRPWorkload`` or a raw fiber-length array — the
+      nonzero-streaming schedule, cross-checked against the analytical
+      model (``model`` key); ``n_arrays > 1`` prices an nnz-balanced
+      multi-array split (makespan = slowest array).
+    * a dense ``MTTKRPWorkload`` — the §V dense mapping.
+
+    ``backend`` is a registry name (default: ``"psram-scheduled"`` for
+    dense/projection workloads, ``"psram-stream"`` for sparse); ``config``
+    the array config (default: paper §V-A, validated at backend
+    construction). Returns a dict: backend, cycles (CycleCounts), time_s,
+    utilization (SustainedBreakdown from counted cycles), energy
+    (EnergyBreakdown) — plus projection_rel_err for ArchConfig workloads,
+    model/imbalance for sparse ones.
     """
-    from repro.core.perf_model import breakdown_from_counts
-    from repro.core.psram import PsramConfig
-    from repro.core.schedule import (
-        build_matmul_program,
-        count_cycles,
-        execute,
-        program_energy,
+    import numpy as np
+
+    from repro.core.perf_model import MTTKRPWorkload, SparseMTTKRPWorkload
+    from repro.models.config import ArchConfig
+
+    if isinstance(workload, ArchConfig):
+        return _projection_report(workload, backend, config, batch, fidelity)
+    if isinstance(workload, SparseMTTKRPWorkload):
+        return _sparse_report(workload, backend, config, n_arrays)
+    # duck-type fiber-length sequences: any 1-D array-like (numpy, jnp,
+    # list, tuple) is a sparse distribution
+    if not isinstance(workload, MTTKRPWorkload):
+        try:
+            fibers = np.asarray(workload)
+        except Exception:
+            fibers = None
+        if fibers is not None and fibers.ndim == 1 and fibers.size \
+                and np.issubdtype(fibers.dtype, np.number):
+            return _sparse_report(
+                SparseMTTKRPWorkload(fiber_lengths=fibers, rank=rank),
+                backend, config, n_arrays)
+    if isinstance(workload, MTTKRPWorkload):
+        from repro import api
+
+        est = api.estimate(workload, backend=backend or "psram-scheduled",
+                           config=config)
+        return {
+            "backend": est.backend,
+            "cycles": est.counts,
+            "time_s": est.time_s,
+            "utilization": est.breakdown,
+            "energy": est.energy,
+        }
+    raise TypeError(
+        "offload_report takes an ArchConfig (decode-step projections), a "
+        "SparseMTTKRPWorkload / fiber-length array, or a MTTKRPWorkload — "
+        f"got {type(workload).__name__}"
     )
 
-    arr = psram_config or PsramConfig()
+
+def _projection_report(cfg, backend, config, batch, fidelity):
+    """Decode-step projections priced per unique shape through api.estimate."""
+    from repro import api, backends
+    from repro.core.perf_model import breakdown_from_counts
+
+    be = backends.get(backend or "psram-scheduled", config)
+    arr = be.config
     shapes = _decode_projection_shapes(cfg, batch)
-    # layers repeat the same few shapes — account each unique program once
-    # with the IR's repeats field instead of rebuilding its op list per layer
-    programs = [
-        dataclasses.replace(build_matmul_program(m, k, n, arr), repeats=times)
+    # layers repeat the same few shapes — estimate each unique shape once,
+    # with the IR's repeats field carrying the layer count
+    ests = [
+        api.estimate(backends.MatmulWorkload(m, k, n, repeats=times),
+                     backend=be)
         for (m, k, n), times in Counter(shapes).items()
     ]
-    counts = sum((count_cycles(p) for p in programs[1:]),
-                 count_cycles(programs[0]))
-    energy = sum((program_energy(p) for p in programs[1:]),
-                 program_energy(programs[0]))
+    counts = sum((e.counts for e in ests[1:]), ests[0].counts)
+    energy = sum((e.energy for e in ests[1:]), ests[0].energy)
     rel_err = None
-    if fidelity:
+    if fidelity and be.capabilities().matmul:
         m, k, n = shapes[0]
         x = jax.random.normal(jax.random.PRNGKey(0), (m, k))
         w = jax.random.normal(jax.random.PRNGKey(1), (k, n))
-        got = execute(build_matmul_program(m, k, n, arr), x, w)
+        got = be.matmul(x, w)
         exact = x @ w
         rel_err = float(jnp.linalg.norm(got - exact) / jnp.linalg.norm(exact))
     return {
+        "backend": be.name,
         "cycles": counts,
         "time_s": counts.duration_s(arr),
         "utilization": breakdown_from_counts(arr, counts),
@@ -128,44 +178,62 @@ def photonic_offload_report(cfg, batch: int = 1, psram_config=None, fidelity: bo
     }
 
 
-def sparse_offload_report(fiber_lengths, rank: int = 32, psram_config=None,
-                          n_arrays: int = 1):
-    """Schedule-derived cost of one sparse MTTKRP on the pSRAM engine.
-
-    The sparse-side sibling of :func:`photonic_offload_report`: builds the
-    nonzero-streaming program (repro.sparse.stream) for the workload's real
-    fiber-length distribution, prices it with the counted-cycle accountant
-    and the §III-B device energies, and cross-checks the counted utilization
-    against the sparse-aware analytical model. ``n_arrays > 1`` prices an
-    nnz-balanced multi-array split (makespan = the slowest array).
-
-    Returns a dict: cycles (CycleCounts, summed), time_s (critical path),
-    utilization (SustainedBreakdown from counted cycles), energy
-    (EnergyBreakdown, summed), model (the analytical SustainedBreakdown),
-    imbalance (max/mean nonzero load).
-    """
-    from repro.core.perf_model import (
-        SparseMTTKRPWorkload,
-        breakdown_from_counts,
-        sustained_mttkrp,
-    )
-    from repro.core.psram import PsramConfig
+def _sparse_report(workload, backend, config, n_arrays):
+    """Streaming sparse MTTKRP priced per array partition, model-checked."""
+    from repro import api, backends
+    from repro.core.perf_model import breakdown_from_counts
     from repro.core.schedule import program_energy
     from repro.sparse.partition import partition_fiber_lengths
 
-    arr = psram_config or PsramConfig()
-    ps = partition_fiber_lengths(fiber_lengths, n_arrays, rank, arr)
+    be = backends.get(backend or "psram-stream", config)
+    arr = be.config
+    # the selected backend must actually be able to price this workload —
+    # refuse execution-only or dense-only backends instead of mislabeling
+    # the stream schedule's bill with their name
+    if "sparse" not in be.capabilities().prices:
+        raise backends.CapabilityError(
+            f"backend {be.name!r} cannot price a sparse MTTKRP workload; "
+            "use 'psram-stream' or 'analytical'"
+        )
+    ps = partition_fiber_lengths(
+        workload.fiber_lengths, n_arrays, workload.rank, arr)
     energy = sum((program_energy(p) for p in ps.programs[1:]),
                  program_energy(ps.programs[0]))
     return {
+        "backend": be.name,
         "cycles": ps.counts,
         "time_s": ps.critical_path_cycles / (arr.frequency_ghz * 1e9),
         "utilization": breakdown_from_counts(arr, ps.counts),
         "energy": energy,
-        "model": sustained_mttkrp(
-            arr, SparseMTTKRPWorkload(fiber_lengths=fiber_lengths, rank=rank)),
+        "model": api.estimate(workload, backend="analytical",
+                              config=arr).breakdown,
         "imbalance": ps.imbalance,
     }
+
+
+def photonic_offload_report(cfg, batch: int = 1, psram_config=None,
+                            fidelity: bool = True):
+    """Deprecated adapter — use :func:`offload_report` with an ArchConfig."""
+    warnings.warn(
+        "photonic_offload_report is deprecated; use "
+        "serve.offload_report(arch_cfg, backend=...)",
+        DeprecationWarning, stacklevel=2,
+    )
+    return offload_report(cfg, config=psram_config, batch=batch,
+                          fidelity=fidelity)
+
+
+def sparse_offload_report(fiber_lengths, rank: int = 32, psram_config=None,
+                          n_arrays: int = 1):
+    """Deprecated adapter — use :func:`offload_report` with a fiber-length
+    array or SparseMTTKRPWorkload."""
+    warnings.warn(
+        "sparse_offload_report is deprecated; use "
+        "serve.offload_report(fiber_lengths, backend=..., n_arrays=...)",
+        DeprecationWarning, stacklevel=2,
+    )
+    return offload_report(fiber_lengths, config=psram_config, rank=rank,
+                          n_arrays=n_arrays)
 
 
 def make_serve_step(cfg):
@@ -234,14 +302,24 @@ class ServeEngine:
                 pos += 1
         return jnp.stack(out, axis=1)  # (B, max_new_tokens)
 
+    def offload_report(self, backend=None, config=None, batch: int | None = None,
+                       fidelity: bool = True):
+        """What offloading this engine's decode projections would cost on the
+        pSRAM array — see module-level :func:`offload_report`."""
+        return offload_report(
+            self.cfg, backend=backend, config=config,
+            batch=1 if batch is None else batch, fidelity=fidelity,
+        )
+
     def photonic_offload_report(self, batch: int | None = None, psram_config=None,
                                 fidelity: bool = True):
-        """What offloading this engine's decode projections would cost on the
-        pSRAM array — see module-level :func:`photonic_offload_report`."""
-        return photonic_offload_report(
-            self.cfg, batch=1 if batch is None else batch,
-            psram_config=psram_config, fidelity=fidelity,
+        """Deprecated adapter — use :meth:`offload_report`."""
+        warnings.warn(
+            "ServeEngine.photonic_offload_report is deprecated; use "
+            "ServeEngine.offload_report", DeprecationWarning, stacklevel=2,
         )
+        return self.offload_report(config=psram_config, batch=batch,
+                                   fidelity=fidelity)
 
     @staticmethod
     def _sample(logits, temperature, key, i):

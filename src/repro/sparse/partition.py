@@ -20,6 +20,7 @@ import math
 
 import numpy as np
 
+from repro.backends.base import resolve_config
 from repro.core.psram import PsramConfig
 from repro.core.schedule import CycleCounts, TileProgram, count_cycles
 from repro.dist.sharding import logical_to_spec
@@ -138,7 +139,7 @@ def partition_fiber_lengths(
 ) -> PartitionedSchedule:
     """nnz-balanced split + per-array stream programs from the fiber-length
     distribution alone (no coordinates needed — paper-scale pricing)."""
-    cfg = config or PsramConfig()
+    cfg = resolve_config(config)
     f = np.asarray(fiber_lengths, dtype=np.int64)
     parts = nnz_balanced_partitions(f, n_arrays)
     programs = tuple(

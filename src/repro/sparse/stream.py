@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.backends.base import resolve_config
 from repro.core.psram import PsramConfig
 from repro.core.mttkrp import cp_chain_exact, cp_chain_psram
 from repro.core.schedule import (
@@ -73,8 +74,7 @@ def build_stream_program(
     the schedule depends on — paper-scale workloads can be priced from the
     distribution alone without materializing coordinates.
     """
-    cfg = config or PsramConfig()
-    cfg.validate()
+    cfg = resolve_config(config)
     widths = rank_tile_widths(rank, cfg.word_cols)
     nnz_b, seg_b = stream_block_layout(fiber_lengths, cfg.rows)
     ops: list = []
@@ -154,7 +154,7 @@ def stream_mttkrp(
     way CP3 is the streamed electrical accumulation of
     :func:`_stream_scatter` — no scatter matrix.
     """
-    cfg = config or PsramConfig()
+    cfg = resolve_config(config)
     mode = csf.mode_order[0]
     return _stream_exec(
         csf.expanded_indices(), csf.values, tuple(factors),
@@ -180,7 +180,7 @@ def stream_mttkrp_blocked(
     """
     from repro.kernels.ops import blocked_segment_sum_op
 
-    cfg = config or PsramConfig()
+    cfg = resolve_config(config)
     rows = cfg.rows
     mode = csf.mode_order[0]
     out_rows = csf.shape[mode]
@@ -231,7 +231,7 @@ def stream_mttkrp_priced(
 ) -> StreamedMTTKRP:
     """Run :func:`stream_mttkrp` and return the executed schedule alongside
     the result, so ``count_cycles``/``program_energy`` price exactly it."""
-    cfg = config or PsramConfig()
+    cfg = resolve_config(config)
     rank = int(factors[0].shape[-1])
     return StreamedMTTKRP(
         result=stream_mttkrp(csf, factors, cfg, psram=psram, adc_bits=adc_bits),

@@ -248,14 +248,23 @@ def test_mttkrp_scheduled_mode_generic():
 
 def test_serve_offload_report():
     from repro.models.config import ArchConfig
-    from repro.serve.engine import photonic_offload_report
+    from repro.serve.engine import offload_report, photonic_offload_report
     cfg = ArchConfig(name="t", num_layers=2, d_model=128, n_heads=2,
                      n_kv_heads=2, head_dim=64, d_ff=256, vocab_size=512)
-    rep = photonic_offload_report(cfg)
+    rep = offload_report(cfg)
+    assert rep["backend"] == "psram-scheduled"
     assert rep["time_s"] > 0
     assert rep["energy"].total_j > 0
     assert 0 < rep["utilization"].utilization <= 1
     assert rep["projection_rel_err"] < 0.05
     # batch-32 decode amortizes tile writes: strictly better utilization
-    rep32 = photonic_offload_report(cfg, batch=32, fidelity=False)
+    rep32 = offload_report(cfg, batch=32, fidelity=False)
     assert rep32["utilization"].utilization > rep["utilization"].utilization
+    # cost-only backend: same counted bill, no fidelity run
+    repa = offload_report(cfg, backend="analytical")
+    assert repa["cycles"] == rep["cycles"]
+    assert repa["projection_rel_err"] is None
+    # the pre-registry name survives as a deprecation adapter
+    with pytest.deprecated_call():
+        old = photonic_offload_report(cfg, fidelity=False)
+    assert old["cycles"] == rep["cycles"]

@@ -420,10 +420,11 @@ def test_cp_als_exact_fit_unbiased():
     idx, vals = coo.indices, coo.values
     lossy = lambda _, fs, m: mttkrp_sparse_psram(
         idx, vals, tuple(fs), m, coo.shape[m])
+    # the callable rides the backend= deprecation adapter
     fixed = cp_als(None, rank=4, n_iter=15, coo=(idx, vals, coo.shape),
-                   key=jax.random.PRNGKey(13), mttkrp_fn=lossy, tol=0)
+                   key=jax.random.PRNGKey(13), backend=lossy, tol=0)
     biased = cp_als(None, rank=4, n_iter=15, coo=(idx, vals, coo.shape),
-                    key=jax.random.PRNGKey(13), mttkrp_fn=lossy, tol=0,
+                    key=jax.random.PRNGKey(13), backend=lossy, tol=0,
                     exact_fit=False)
     assert abs(fixed.fit - true_fit(fixed)) < 1e-4
     assert abs(fixed.fit - true_fit(fixed)) < abs(biased.fit - true_fit(biased))
@@ -458,16 +459,21 @@ def test_cp_als_psram_container_converges():
 # ----------------------------------------------------------- serve pricing
 
 def test_sparse_offload_report():
-    from repro.serve.engine import sparse_offload_report
+    from repro.serve.engine import offload_report, sparse_offload_report
 
     f = powerlaw_fiber_lengths(1, 2000, 20_000, alpha=1.2)
-    rep = sparse_offload_report(f, rank=16)
+    rep = offload_report(f, rank=16)
+    assert rep["backend"] == "psram-stream"
     assert rep["time_s"] > 0
     assert rep["energy"].total_j > 0
     assert 0 < rep["utilization"].utilization <= 1
     assert rep["utilization"].utilization == pytest.approx(
         rep["model"].utilization, rel=0.05)
     # splitting over 4 arrays shortens the critical path
-    rep4 = sparse_offload_report(f, rank=16, n_arrays=4)
+    rep4 = offload_report(f, rank=16, n_arrays=4)
     assert rep4["time_s"] < rep["time_s"]
     assert rep4["imbalance"] >= 1.0
+    # the pre-registry name survives as a deprecation adapter
+    with pytest.deprecated_call():
+        old = sparse_offload_report(f, rank=16)
+    assert old["cycles"] == rep["cycles"]

@@ -1,0 +1,95 @@
+"""Bench-regression gate: compare a fresh bench run against the committed
+trajectory and fail on slowdowns.
+
+Usage (CI runs this after the smoke bench):
+
+    python benchmarks/check_regression.py NEW.json BASELINE.json \
+        --max-slowdown 2.0 --backends psram-stream,psram-scheduled,exact
+
+Rows are matched by exact ``name``; only wall-clock rows are compared
+(``us_per_call`` above ``--min-us`` in *both* files — modeled/near-zero rows
+are pure noise at this granularity). When a name appears more than once in a
+file (the committed BENCH_psram.json keeps old rows alongside re-measured
+ones as the trajectory), the *last* occurrence wins — it is the most recent
+measurement. Exit code 1 if any compared row slowed down by more than the
+factor; the table is printed either way so CI logs double as a perf diff.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _last_by_name(rows: list[dict]) -> dict[str, dict]:
+    out: dict[str, dict] = {}
+    for r in rows:
+        out[r["name"]] = r
+    return out
+
+
+def compare(new_rows: list[dict], base_rows: list[dict],
+            max_slowdown: float = 2.0, backends: set | None = None,
+            min_us: float = 1000.0) -> list[dict]:
+    """Return the list of comparisons; entry['failed'] marks regressions."""
+    new, base = _last_by_name(new_rows), _last_by_name(base_rows)
+    results = []
+    for name in sorted(set(new) & set(base)):
+        n, b = new[name], base[name]
+        if backends is not None and n.get("backend") not in backends:
+            continue
+        if n["us_per_call"] < min_us or b["us_per_call"] < min_us:
+            continue
+        ratio = n["us_per_call"] / b["us_per_call"]
+        results.append({
+            "name": name,
+            "backend": n.get("backend", "?"),
+            "base_us": b["us_per_call"],
+            "new_us": n["us_per_call"],
+            "ratio": ratio,
+            "failed": ratio > max_slowdown,
+        })
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("new", help="fresh bench JSON (e.g. the CI smoke run)")
+    ap.add_argument("baseline", help="committed BENCH_psram.json")
+    ap.add_argument("--max-slowdown", type=float, default=2.0,
+                    help="fail when new/base exceeds this (default 2.0)")
+    ap.add_argument("--backends", default=None,
+                    help="comma-separated backend names to gate on "
+                         "(default: every backend)")
+    ap.add_argument("--min-us", type=float, default=1000.0,
+                    help="ignore rows faster than this in either file — "
+                         "µs-scale rows are timer noise (default 1000)")
+    args = ap.parse_args(argv)
+    with open(args.new) as f:
+        new_rows = json.load(f)
+    with open(args.baseline) as f:
+        base_rows = json.load(f)
+    backends = set(args.backends.split(",")) if args.backends else None
+    results = compare(new_rows, base_rows, args.max_slowdown, backends,
+                      args.min_us)
+    if not results:
+        print("no comparable wall-clock rows between the two files "
+              "(names must match exactly) — nothing gated")
+        return 0
+    width = max(len(r["name"]) for r in results)
+    for r in results:
+        flag = "REGRESSION" if r["failed"] else "ok"
+        print(f"{r['name']:<{width}}  {r['base_us']:>12.1f}us -> "
+              f"{r['new_us']:>12.1f}us  {r['ratio']:>6.2f}x  {flag}")
+    failed = [r for r in results if r["failed"]]
+    if failed:
+        print(f"\n{len(failed)} row(s) slowed down more than "
+              f"{args.max_slowdown:g}x vs {args.baseline}")
+        return 1
+    print(f"\nall {len(results)} compared rows within "
+          f"{args.max_slowdown:g}x of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

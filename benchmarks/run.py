@@ -52,6 +52,20 @@ def _time(fn, *args, n=5, warmup=2):
     return (time.perf_counter() - t0) / n * 1e6  # us
 
 
+def _model_time(fn, *args, n=10):
+    """Wall time of a pure-python/numpy model evaluation, in us.
+
+    Analytical rows used to report ``us_per_call: 0.0`` — the *model* is
+    also code on the hot estimate path (serve sizing sweeps call it per
+    request), so the trajectory tracks its cost too (satellite: a cost-path
+    regression now moves a number instead of hiding behind a literal 0)."""
+    fn(*args)  # warm any lazy imports/caches
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn(*args)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
 ROWS: list[dict] = []
 SELECTED: set | None = None   # None = every registered backend
 
@@ -72,15 +86,19 @@ def row(name, us, derived, backend="analytical"):
 # ----------------------------------------------------------------- Fig 5(i)
 def bench_fig5_channels():
     """Sustained PetaOps vs wavelength channels @ 20 GHz (paper Fig. 5 i)."""
-    for ch, pops in sweep_channels(channels=[4, 8, 13, 26, 39, 52]):
-        row(f"fig5i_channels_{ch}", 0.0, f"{pops:.3f} PetaOps")
+    channels = [4, 8, 13, 26, 39, 52]
+    us = _model_time(lambda: sweep_channels(channels=channels)) / len(channels)
+    for ch, pops in sweep_channels(channels=channels):
+        row(f"fig5i_channels_{ch}", us, f"{pops:.3f} PetaOps")
 
 
 # ---------------------------------------------------------------- Fig 5(ii)
 def bench_fig5_frequency():
     """Sustained PetaOps vs operating frequency @ 52 channels (Fig. 5 ii)."""
-    for f, pops in sweep_frequency(freqs=(1, 2, 5, 10, 15, 20)):
-        row(f"fig5ii_freq_{int(f)}GHz", 0.0, f"{pops:.3f} PetaOps")
+    freqs = (1, 2, 5, 10, 15, 20)
+    us = _model_time(lambda: sweep_frequency(freqs=freqs)) / len(freqs)
+    for f, pops in sweep_frequency(freqs=freqs):
+        row(f"fig5ii_freq_{int(f)}GHz", us, f"{pops:.3f} PetaOps")
 
 
 # ------------------------------------------------------------- §V headline
@@ -89,13 +107,15 @@ def bench_headline():
     cfg = PsramConfig()
     wl = MTTKRPWorkload()
     sb = sustained_mttkrp(cfg, wl)
-    row("headline_peak", 0.0, f"{peak_petaops(cfg):.3f} PetaOps (paper: 17)")
-    row("headline_sustained", 0.0, f"{sb.sustained_petaops:.3f} PetaOps")
-    row("headline_utilization", 0.0, f"{sb.utilization:.4f}")
+    us_model = _model_time(sustained_mttkrp, cfg, wl)
+    row("headline_peak", _model_time(peak_petaops, cfg),
+        f"{peak_petaops(cfg):.3f} PetaOps (paper: 17)")
+    row("headline_sustained", us_model, f"{sb.sustained_petaops:.3f} PetaOps")
+    row("headline_utilization", us_model, f"{sb.utilization:.4f}")
     small = MTTKRPWorkload(i=10**4, j=10**4, k=10**4, rank=32)
     row("tts_psram_1e4cube", time_to_solution_s(cfg, small) * 1e6, "pSRAM array")
     row("tts_tpu_v5e_int8", tpu_mttkrp_time_s(small) * 1e6, "1 chip roofline")
-    row("speedup_vs_tpu", 0.0,
+    row("speedup_vs_tpu", _model_time(tpu_mttkrp_time_s, small),
         f"{tpu_mttkrp_time_s(small) / time_to_solution_s(cfg, small):.1f}x")
 
 
@@ -119,8 +139,26 @@ def bench_mttkrp_paths():
         idx, vals = dense_to_coo(x)
         f_sparse = jax.jit(lambda i, v: mttkrp_sparse(i, v, tuple(fs), 0, 256))
         us = _time(f_sparse, idx, vals)
+        want = f_sparse(idx, vals)
         row("mttkrp_sparse_coo", us, f"{flops/us/1e3:.1f} GFLOP/s cpu",
             "exact")
+
+        # the blocked-segment fold on the same stream: exact arithmetic,
+        # per-block gather-mask contractions instead of a per-nonzero
+        # scatter (tentpole 3) — the speedup the compiled stream executor
+        # inherits
+        from repro.sparse import csf_for_mode, stream_mttkrp
+        from repro.sparse.formats import COO
+
+        csf = csf_for_mode(COO(indices=idx, values=vals, shape=x.shape), 0)
+        f_blocked = lambda: stream_mttkrp(csf, tuple(fs), PsramConfig(),
+                                          compiled=True)
+        us_b = _time(f_blocked, n=5, warmup=1)
+        got = f_blocked()
+        rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+        row("mttkrp_sparse_coo_blocked", us_b,
+            f"{flops/us_b/1e3:.1f} GFLOP/s cpu rel_vs_segsum={rel:.1e} "
+            f"speedup={us/us_b:.1f}x", "exact")
 
     if selected("pallas"):
         f_kr = jax.jit(lambda t: mttkrp_op(t, b, c, backend="ref"))
@@ -150,14 +188,18 @@ def bench_psram_matmul():
 def bench_schedule_executor():
     """Vectorized schedule executor vs the per-cycle loop oracle — the PR-2
     refactor's headline speedup, on the 256x512 @ 512x128 reference matmul.
-    Both interpret the same tile program and are bit-identical."""
+    Both interpret the same tile program and are bit-identical. The compiled
+    rows add the PR-5 layer: the program cache (build + validate now O(1)
+    on repeats) and the cached jitted executor, timed on the full
+    build→validate→execute path a repeated same-shape caller pays."""
     from repro.core.perf_model import measured_utilization
     from repro.core.schedule import (
         build_matmul_program, count_cycles, execute, execute_reference,
     )
     x = jax.random.normal(jax.random.PRNGKey(0), (256, 512))
     w = jax.random.normal(jax.random.PRNGKey(1), (512, 128))
-    prog = build_matmul_program(256, 512, 128, PsramConfig())
+    cfg = PsramConfig()
+    prog = build_matmul_program(256, 512, 128, cfg)
     us_vec = _time(execute, prog, x, w, n=5, warmup=1) \
         if selected("psram-scheduled") else None
     us_loop = _time(execute_reference, prog, x, w, n=3, warmup=1) \
@@ -181,6 +223,19 @@ def bench_schedule_executor():
         row("schedule_exec_counted_cycles", 0.0,
             f"{counts.compute_cycles} compute + {counts.write_cycles} write "
             f"util={mu.utilization:.3f}", "psram-scheduled")
+        # repeated same-shape calls, full front-door path: program cache
+        # (O(1) validate) + eager executor vs + cached jitted executor
+        repeat = lambda c: execute(
+            build_matmul_program(256, 512, 128, cfg), x, w, compiled=c)
+        us_rep = _time(repeat, False, n=5, warmup=1)
+        us_cmp = _time(repeat, True, n=5, warmup=1)
+        a, b = repeat(True), repeat(False)
+        rel = float(jnp.linalg.norm(a - b) / jnp.linalg.norm(b))
+        row("schedule_exec_repeat_cached", us_rep,
+            "build+validate+eager on a cache-hot program", "psram-scheduled")
+        row("schedule_exec_compiled", us_cmp,
+            f"cached jitted executor rel_vs_eager={rel:.1e} "
+            f"speedup={us_rep/us_cmp:.1f}x", "psram-scheduled")
 
 
 # --------------------------------------------------------- CP-ALS end2end
@@ -209,9 +264,12 @@ def bench_energy():
     cfg = PsramConfig()
     wl = MTTKRPWorkload(i=10**4, j=10**4, k=10**4, rank=32)
     e = mttkrp_energy(cfg, wl)
-    row("energy_mttkrp_1e4cube", 0.0, f"{e.total_j:.2f} J (write {e.write_j:.2f}, adc {e.adc_j:.2f})")
-    row("energy_array_tops_per_j", 0.0, f"{ops_per_joule(cfg, wl)/1e12:.1f} TOps/J")
-    row("energy_tpu_tops_per_j", 0.0, f"{tpu_ops_per_joule(wl)/1e12:.2f} TOps/J")
+    row("energy_mttkrp_1e4cube", _model_time(mttkrp_energy, cfg, wl),
+        f"{e.total_j:.2f} J (write {e.write_j:.2f}, adc {e.adc_j:.2f})")
+    row("energy_array_tops_per_j", _model_time(ops_per_joule, cfg, wl),
+        f"{ops_per_joule(cfg, wl)/1e12:.1f} TOps/J")
+    row("energy_tpu_tops_per_j", _model_time(tpu_ops_per_joule, wl),
+        f"{tpu_ops_per_joule(wl)/1e12:.2f} TOps/J")
     row("energy_advantage", 0.0, f"{ops_per_joule(cfg, wl)/tpu_ops_per_joule(wl):.0f}x")
 
 
@@ -229,6 +287,8 @@ def bench_sparse_mttkrp(smoke: bool = False):
         build_stream_program, csf_for_mode, powerlaw_coo, stream_mttkrp,
     )
 
+    from repro.sparse import blocked_fold_reference
+
     cfg = PsramConfig()
     shape = (400, 300, 200) if smoke else (2000, 1500, 1200)
     size = shape[0] * shape[1] * shape[2]
@@ -243,27 +303,44 @@ def bench_sparse_mttkrp(smoke: bool = False):
             jax.random.normal(jax.random.PRNGKey(d + 1), (s, rank))
             for d, s in enumerate(shape)
         )
-        us = _time(lambda: stream_mttkrp(csf, fs, cfg), n=3, warmup=1)
         s = csf.to_coo()
         exact = mttkrp_sparse(s.indices, s.values, fs, 0, shape[0])
-        bit = bool(jnp.all(stream_mttkrp(csf, fs, cfg) == exact))
         prog = build_stream_program(csf.fiber_lengths(), rank, cfg)
         counts = count_cycles(prog)
         measured = measured_utilization(prog)
         model = sustained_mttkrp(cfg, SparseMTTKRPWorkload(
             fiber_lengths=csf.fiber_lengths(), rank=rank))
         agree = measured.utilization / max(model.utilization, 1e-30)
+        # the hot path: the compiled blocked-fold executor — bit-identical
+        # to its flat blocked reference (mttkrp_sparse_blocked), exact
+        # arithmetic reassociated vs the per-nonzero segment-sum fold
+        fc = lambda: stream_mttkrp(csf, fs, cfg, compiled=True)
+        us = _time(fc, n=3, warmup=1)
+        got = fc()
+        bit = bool(jnp.all(got == blocked_fold_reference(csf, fs, cfg)))
+        rel = float(jnp.linalg.norm(got - exact) / jnp.linalg.norm(exact))
         row(f"sparse_mttkrp_d{dens:g}_nnz{coo.nnz}", us,
-            f"bit_identical={bit} cycles={counts.total_cycles} "
+            f"bit_identical={bit} (vs blocked reference) "
+            f"rel_vs_segsum={rel:.1e} cycles={counts.total_cycles} "
             f"util={measured.utilization:.4f} model_agree={agree:.3f}",
             "psram-stream")
+        # the eager parity oracle: per-nonzero electrical fold, bit-identical
+        # to mttkrp_sparse — the trajectory of the default (oracle) path
+        fe = lambda: stream_mttkrp(csf, fs, cfg)
+        us_e = _time(fe, n=3, warmup=1)
+        bit_e = bool(jnp.all(fe() == exact))
+        row(f"sparse_mttkrp_eager_d{dens:g}_nnz{coo.nnz}", us_e,
+            f"bit_identical={bit_e} (vs segment-sum) "
+            f"compiled_speedup={us_e/us:.1f}x", "psram-stream")
     # modeled §V-A-scale sparse sustained rate from the distribution alone
     from repro.sparse import powerlaw_fiber_lengths
     f = powerlaw_fiber_lengths(0, 10**6 if not smoke else 10**4,
                                4 * 10**6 if not smoke else 4 * 10**4,
                                alpha=1.1)
-    sb = sustained_mttkrp(cfg, SparseMTTKRPWorkload(fiber_lengths=f, rank=32))
-    row("sparse_sustained_powerlaw", 0.0,
+    wl = SparseMTTKRPWorkload(fiber_lengths=f, rank=32)
+    sb = sustained_mttkrp(cfg, wl)
+    row("sparse_sustained_powerlaw",
+        _model_time(sustained_mttkrp, cfg, wl, n=3),
         f"{sb.sustained_petaops:.4f} PetaOps occ={sb.wavelength_occupancy:.3f}")
 
 
@@ -283,6 +360,9 @@ def bench_backend_matrix(smoke: bool = False):
     )
     want = api.mttkrp(x, fs, 0, backend="exact")
     wl = MTTKRPWorkload(i=shape[0], j=shape[1], k=shape[2], rank=rank)
+    suffix = "_smoke" if smoke else ""   # smoke sizes get their own names so
+                                         # the CI regression check compares
+                                         # like against like
     for name in backends.list_backends():
         if not selected(name):
             continue
@@ -295,14 +375,15 @@ def bench_backend_matrix(smoke: bool = False):
             rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
             derived = f"rel_err={rel:.4f} (tol {caps.rel_tol:g})"
         else:
-            us, derived = 0.0, "cost-only"
+            us = _model_time(lambda: api.estimate(wl, backend=be), n=3)
+            derived = "cost-only"
         if caps.cost_model:
             try:
                 est = api.estimate(wl, backend=be)
                 derived += f" est_util={est.utilization:.4f}"
             except backends.CapabilityError:
                 pass  # e.g. psram-stream prices sparse distributions only
-        row(f"backend_matrix_{name}", us, derived, name)
+        row(f"backend_matrix_{name}{suffix}", us, derived, name)
 
 
 # --------------------------------------------- multi-array engine scaling
@@ -310,10 +391,13 @@ def bench_scaling():
     """Beyond-paper: the 'scalable engine' (paper SIII) quantified — arrays
     scale linearly until the engine fabric saturates at the knee."""
     from repro.core.scaling import knee, sweep
-    for p in sweep(counts=(1, 4, 16, 64, 256)):
-        row(f"scaling_{p.arrays}_arrays", 0.0,
+    counts = (1, 4, 16, 64, 256)
+    us = _model_time(sweep, counts) / len(counts)
+    for p in sweep(counts=counts):
+        row(f"scaling_{p.arrays}_arrays", us,
             f"{p.delivered_petaops:.1f} PetaOps eff={p.efficiency:.2f}")
-    row("scaling_knee_default_fabric", 0.0, f"{knee()} arrays")
+    row("scaling_knee_default_fabric", _model_time(knee, n=3),
+        f"{knee()} arrays")
 
 
 def main(argv=None) -> None:

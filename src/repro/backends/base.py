@@ -89,6 +89,10 @@ class Capabilities:
     prefers_csf: bool = False      # mttkrp() sorts data into a mode-rooted
                                    # CSF; callers looping over modes should
                                    # pass prebuilt CSFs to avoid resorting
+    compiled: bool = False         # running the opt-in compiled fast mode:
+                                   # same arithmetic, reassociated fold /
+                                   # fused dequant chain — bit_exact drops,
+                                   # the eager default stays the oracle
     description: str = ""
 
 
@@ -180,26 +184,30 @@ def list_backends() -> tuple[str, ...]:
     return tuple(_REGISTRY)
 
 
-def get(name: "str | Backend", config: PsramConfig | None = None) -> Backend:
+def get(name: "str | Backend", config: PsramConfig | None = None,
+        **kwargs) -> Backend:
     """Construct (or pass through) a backend.
 
     ``name`` may be a registered name or an already-built :class:`Backend`
     instance (returned as-is; ``config`` must then be None — an instance
-    already carries its config).
+    already carries its config). Extra keyword arguments go to the backend
+    constructor (e.g. ``compiled=True`` on the two pSRAM schedule backends,
+    ``lowering=`` on ``"pallas"``); a backend that doesn't take them raises
+    ``TypeError`` — the capability simply doesn't exist there.
     """
     _ensure_builtin()
     if isinstance(name, Backend):
-        if config is not None:
+        if config is not None or kwargs:
             raise ValueError(
-                "pass config only with a backend *name*; an instance already "
-                "carries its own"
+                "pass config/constructor options only with a backend *name*; "
+                "an instance is already built"
             )
         return name
     if name not in _REGISTRY:
         raise UnknownBackendError(
             f"unknown backend {name!r}; registered: {', '.join(_REGISTRY)}"
         )
-    return _REGISTRY[name](config)
+    return _REGISTRY[name](config, **kwargs)
 
 
 def _ensure_builtin() -> None:

@@ -49,17 +49,23 @@ def reconstruct(factors: list[jax.Array], lambdas: jax.Array | None = None) -> j
     return mat.reshape([f.shape[0] for f in factors])
 
 
-def _gram_hadamard(factors, skip):
+def _hadamard_of(grams, skip):
+    """Hadamard of precomputed per-factor Grams, skipping ``skip``.
+
+    Mode-ascending product order over ``f.T @ f`` Grams — the ALS loop
+    keeps the (R, R) Grams current incrementally (recompute only the mode
+    it just updated) instead of re-materializing all N of them N+1 times
+    per sweep; the bits are unchanged (same op, same operand, same fold
+    order as computing every Gram fresh)."""
     out = None
-    for d, f in enumerate(factors):
+    for d, g in enumerate(grams):
         if d == skip:
             continue
-        g = f.T @ f
         out = g if out is None else out * g
     return out
 
 
-def _resolve_backend(backend, config):
+def _resolve_backend(backend, config, compiled=False):
     """Turn ``backend`` (registry name | Backend instance | bare callable)
     into ``(callable_fn, registry_backend)`` — exactly one is non-None.
 
@@ -76,8 +82,21 @@ def _resolve_backend(backend, config):
                 "callable closes over its own engine); pass a registry name "
                 "or drop config="
             )
+        if compiled:
+            raise ValueError(
+                "compiled= selects a registry backend's fast mode and has "
+                "no effect on a bare callable"
+            )
         return backend, None
-    be = _backends.get(backend, config)
+    if compiled:
+        if not isinstance(backend, str):
+            raise ValueError(
+                "compiled= needs a backend *name* (the instance you passed "
+                "was already constructed with its own compiled setting)"
+            )
+        be = _backends.get(backend, config, compiled=True)
+    else:
+        be = _backends.get(backend, config)
     caps = be.capabilities()
     if not caps.executes:
         raise _backends.CapabilityError(
@@ -119,6 +138,7 @@ def cp_als(
     tol: float = 1e-7,
     exact_fit: bool | None = None,
     csfs: list | None = None,
+    compiled: bool = False,
 ) -> CPState:
     """Run CP-ALS on ``x`` (dense), ``coo=(indices, values, shape)``, or
     ``sparse`` — any ``repro.sparse.formats`` container (COO/SortedCOO/
@@ -134,6 +154,13 @@ def cp_als(
     pre-registry contract ``fn(x_or_none, factors, mode) -> (I_mode, R)``
     — it receives the dense ``x`` (or None for coo/sparse data), exactly as
     ``mttkrp_fn=`` always did (that spelling still works and warns).
+
+    ``compiled=True`` opts the selected registry backend into its compiled
+    fast mode (``backends.get(name, config, compiled=True)`` — the
+    blocked-fold stream executor / the cached jitted matmul executor);
+    factor updates then run the reassociated-fold numerics while the
+    convergence metric stays exact (``exact_fit`` defaults on for any
+    supplied backend). Only meaningful with a backend *name*.
 
     ``exact_fit`` controls the convergence metric: the inner-product fit
     trick reuses the backend's last-mode MTTKRP, so a *lossy* backend (the
@@ -160,10 +187,15 @@ def cp_als(
             "config= selects the backend's array config and needs backend=; "
             "the default exact paths don't touch a PsramConfig"
         )
+    if compiled and backend is None:
+        raise ValueError(
+            "compiled= selects a backend's fast mode and needs backend=; "
+            "the default exact paths have no compiled variant"
+        )
     callable_fn = be = None
     lossy = None
     if backend is not None:
-        callable_fn, be = _resolve_backend(backend, config)
+        callable_fn, be = _resolve_backend(backend, config, compiled)
         lossy = True if callable_fn is not None else be.capabilities().lossy
     # a backend that sorts into a mode-rooted CSF per call (psram-stream,
     # pallas sparse) must see prebuilt per-mode CSFs, or every sweep re-sorts
@@ -239,15 +271,20 @@ def cp_als(
     prev_fit, fit = -1.0, 0.0
     it = 0
     last = len(shape) - 1
+    # per-sweep Gram reuse: each (R, R) Gram changes only when its factor
+    # does, so keep them current incrementally — N Gram matmuls per sweep
+    # instead of N·(N-1) + N (the bits are unchanged: same op, same operand)
+    grams = [f.T @ f for f in factors]
     for it in range(1, n_iter + 1):
         for mode in range(len(shape)):
             m = fn(x, factors, mode)                      # MTTKRP
-            g = _gram_hadamard(factors, mode)             # (R, R)
+            g = _hadamard_of(grams, mode)                 # (R, R)
             a = m @ jnp.linalg.pinv(g)
             lam = jnp.maximum(jnp.linalg.norm(a, axis=0), 1e-12)
             factors[mode] = a / lam
+            grams[mode] = factors[mode].T @ factors[mode]
         # fit = 1 - ||X - X_hat|| / ||X||, via the standard inner-product trick
-        g_all = _gram_hadamard(factors, skip=-1) * jnp.outer(lam, lam)
+        g_all = _hadamard_of(grams, skip=-1) * jnp.outer(lam, lam)
         # <X, X_hat> needs the final-mode MTTKRP against the *current* other
         # factors — m already is that (they don't change after the last
         # update). A lossy backend's m would bias the metric, so recompute

@@ -78,17 +78,20 @@ def mttkrp_dense_kr(x: jax.Array, factors: list[jax.Array], mode: int) -> jax.Ar
 # ---------------------------------------------------------------------------
 
 def cp_chain_exact(indices, values, factors, mode) -> jax.Array:
-    """CP1 + CP2 over the nonzero stream, exact floats: the (nnz, R) chain
+    """CP1 + CP2 over the nonzero stream, exact floats: the (..., R) chain
     matrix ``d_p = x_p · ⊙ other-factor rows``. Shared by the segment-sum
     path below and the streaming executor (repro.sparse.stream) — one
-    implementation is what makes their bit-identity a structural fact."""
+    implementation is what makes their bit-identity a structural fact.
+    ``indices``/``values`` may carry leading batch dims (the scan-lowered
+    executors stream stacked nonzero blocks through it); every op is
+    pointwise per nonzero, so blocking cannot change a single bit."""
     had = None
     for d in range(len(factors)):
         if d == mode:
             continue
-        rows = factors[d][indices[:, d]]            # (nnz, R)  gather
+        rows = factors[d][indices[..., d]]          # (..., R)  gather
         had = rows if had is None else had * rows   # CP 1
-    return values[:, None] * had                    # CP 2
+    return values[..., None] * had                  # CP 2
 
 
 @partial(jax.jit, static_argnames=("mode", "out_rows"))
@@ -113,7 +116,10 @@ def cp_chain_psram(indices, values, factors, mode, adc_bits=16) -> jax.Array:
     """CP1 + CP2 through the array numerics: each product passes 8-bit
     operand quantization and the ADC (per-row scale for the stored operand,
     per-vector intensity scale for the driven one). Shared by the
-    segment-sum path below and the streaming executor."""
+    segment-sum path below and the streaming executor. Like
+    :func:`cp_chain_exact`, accepts leading batch dims (all quantization
+    scales are per-nonzero ``axis=-1`` reductions, so blocking is a no-op
+    on the numerics)."""
     adc = ADCConfig(bits=adc_bits)
     others = [d for d in range(len(factors)) if d != mode]
 
@@ -122,16 +128,16 @@ def cp_chain_psram(indices, values, factors, mode, adc_bits=16) -> jax.Array:
         return qv.astype(jnp.int32), s
 
     # CP 1 over (possibly >2) non-target modes: fold pairwise through the ADC
-    rows0, s0 = q(factors[others[0]][indices[:, others[0]]], axis=-1)
+    rows0, s0 = q(factors[others[0]][indices[..., others[0]]], axis=-1)
     had = rows0.astype(jnp.float32) * s0
     for d in others[1:]:
         qa, sa = q(had, -1)
-        qb, sb = q(factors[d][indices[:, d]], -1)
+        qb, sb = q(factors[d][indices[..., d]], -1)
         prod = qa * qb
         prod = adc_requantize(prod, adc, float(QMAX) * float(QMAX))
         had = prod * (sa * sb)
     # CP 2
-    qv, sv = q(values[:, None], -1)
+    qv, sv = q(values[..., None], -1)
     qh, sh = q(had, -1)
     return adc_requantize(qv * qh, adc, float(QMAX) * float(QMAX)) * (sv * sh)
 
@@ -184,6 +190,43 @@ def mttkrp_sparse_psram_scheduled(
     return stream_mttkrp_coo(
         indices, values, tuple(factors), mode, out_rows,
         config=config, psram=True,
+    )
+
+
+def mttkrp_sparse_blocked(
+    indices: jax.Array,
+    values: jax.Array,
+    factors: tuple,
+    mode: int,
+    out_rows: int,
+    config=None,
+    psram: bool = False,
+    adc_bits: int = 16,
+) -> jax.Array:
+    """Exact sparse MTTKRP under the *blocked-segment fold*: the flat
+    reference twin of the compiled streaming executor.
+
+    The nonzero stream is sorted into a mode-rooted CSF, cut into blocks of
+    ``cfg.rows``, and CP3 runs as one batched gather-mask contraction — a
+    ``(blocks, segments, rows) @ (blocks, rows, R)`` dot, the §IV per-channel
+    binary drive masks in matrix form — whose per-(block, segment) partials
+    accumulate electrically into the output rows in block order. This is the
+    fold order of the *hardware* (bit-line photocurrent sums per block, one
+    electrical carry across blocks), and it is the parity oracle for
+    ``repro.sparse.stream.stream_mttkrp(compiled=True)``: one flat batched
+    contraction here vs. a ``lax.scan`` with the output as the carry there,
+    asserted bit-identical in tests/test_sparse.py. Against the per-nonzero
+    ``mttkrp_sparse`` fold it is exact arithmetic merely reassociated
+    (rel ~1e-6 on well-conditioned operands, no quantization anywhere).
+
+    Host-side sort/blocking like the CSF constructors: call with concrete
+    (non-traced) ``indices``, outside jit.
+    """
+    from repro.sparse.stream import blocked_fold_mttkrp_coo
+
+    return blocked_fold_mttkrp_coo(
+        indices, values, tuple(factors), mode, out_rows,
+        config=config, psram=psram, adc_bits=adc_bits,
     )
 
 

@@ -33,6 +33,7 @@ from .partition import (
 )
 from .stream import (
     StreamedMTTKRP,
+    blocked_fold_reference,
     build_stream_program,
     rank_tile_widths,
     stream_mttkrp,
@@ -53,6 +54,7 @@ __all__ = [
     "PartitionedSchedule",
     "StreamedMTTKRP",
     "arrays_for_mesh",
+    "blocked_fold_reference",
     "build_stream_program",
     "csf_for_mode",
     "imbalance",

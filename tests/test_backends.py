@@ -195,6 +195,66 @@ def test_scheduled_backend_rejects_sparse(sparse_fixture):
         backends.get("psram-scheduled").mttkrp(coo, fs, 0)
 
 
+# --------------------------------------------- compiled fast mode (PR 5)
+
+@pytest.mark.parametrize("name", ["psram-scheduled", "psram-stream"])
+def test_compiled_capability_wiring(name):
+    be = backends.get(name, compiled=True)
+    caps = be.capabilities()
+    assert caps.compiled and not caps.bit_exact
+    eager = backends.get(name).capabilities()
+    assert not eager.compiled and eager.bit_exact
+    assert caps.rel_tol == eager.rel_tol      # same quantization envelope
+
+
+def test_compiled_stream_parity(sparse_fixture):
+    """Compiled stream backend: same ADC envelope vs exact, tight
+    reassociation envelope vs its own eager twin, and bit-identical to the
+    flat blocked reference with the quantized chain."""
+    from repro.core.mttkrp import mttkrp_sparse_blocked
+
+    coo, fs = sparse_fixture
+    csf = csf_for_mode(coo, 0)
+    fast = backends.get("psram-stream", compiled=True).mttkrp(csf, fs, 0)
+    eager = backends.get("psram-stream").mttkrp(csf, fs, 0)
+    want = backends.get("exact").mttkrp(csf, fs, 0)
+    assert float(jnp.linalg.norm(fast - want) / jnp.linalg.norm(want)) < 0.05
+    assert float(jnp.linalg.norm(fast - eager) / jnp.linalg.norm(eager)) < 1e-4
+    s = csf.to_coo()
+    ref = mttkrp_sparse_blocked(s.indices, s.values, fs, 0, coo.shape[0],
+                                psram=True)
+    np.testing.assert_array_equal(np.asarray(fast), np.asarray(ref))
+
+
+def test_compiled_scheduled_matmul_envelope():
+    x = jax.random.normal(jax.random.PRNGKey(0), (40, 70))
+    w = jax.random.normal(jax.random.PRNGKey(1), (70, 30))
+    fast = backends.get("psram-scheduled", compiled=True).matmul(x, w)
+    eager = backends.get("psram-scheduled").matmul(x, w)
+    assert float(jnp.linalg.norm(fast - eager) / jnp.linalg.norm(eager)) < 1e-6
+
+
+def test_get_rejects_kwargs_on_instances_and_unknown_kwargs():
+    be = backends.get("exact")
+    with pytest.raises(ValueError):
+        backends.get(be, compiled=True)
+    with pytest.raises(TypeError):
+        backends.get("exact", compiled=True)   # no compiled mode there
+
+
+def test_cp_als_compiled_backend(sparse_fixture):
+    from repro.core.cp_als import cp_als
+
+    coo, _ = sparse_fixture
+    a = cp_als(None, rank=3, n_iter=5, sparse=coo, backend="psram-stream",
+               key=jax.random.PRNGKey(2))
+    b = cp_als(None, rank=3, n_iter=5, sparse=coo, backend="psram-stream",
+               compiled=True, key=jax.random.PRNGKey(2))
+    assert b.fit == pytest.approx(a.fit, abs=1e-3)
+    with pytest.raises(ValueError):
+        cp_als(None, rank=3, n_iter=2, sparse=coo, compiled=True)
+
+
 # ------------------------------------------------- config resolution rules
 
 def test_config_validated_at_construction():

@@ -1,0 +1,58 @@
+"""The CI bench-regression gate (benchmarks/check_regression.py)."""
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+_PATH = pathlib.Path(__file__).resolve().parent.parent / "benchmarks" \
+    / "check_regression.py"
+_spec = importlib.util.spec_from_file_location("check_regression", _PATH)
+check_regression = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_regression)
+
+
+def _row(name, us, backend="psram-stream"):
+    return {"name": name, "us_per_call": us, "derived": "", "backend": backend}
+
+
+def test_compare_matches_by_name_and_flags_slowdowns():
+    base = [_row("a", 1000.0), _row("b", 10_000.0), _row("c", 5000.0)]
+    new = [_row("a", 1500.0), _row("b", 25_000.0), _row("d", 1.0)]
+    res = check_regression.compare(new, base, max_slowdown=2.0, min_us=100.0)
+    by = {r["name"]: r for r in res}
+    assert set(by) == {"a", "b"}          # c/d unmatched -> not gated
+    assert not by["a"]["failed"]          # 1.5x is within 2x
+    assert by["b"]["failed"]              # 2.5x regression
+
+
+def test_compare_ignores_fast_rows_and_other_backends():
+    base = [_row("fast", 10.0), _row("other", 9000.0, backend="exact")]
+    new = [_row("fast", 90.0), _row("other", 90_000.0, backend="exact")]
+    res = check_regression.compare(new, base, min_us=1000.0)
+    assert [r["name"] for r in res] == ["other"]   # µs-row not gated
+    res = check_regression.compare(new, base, min_us=100.0,
+                                   backends={"psram-stream"})
+    assert res == []                      # exact filtered out
+
+
+def test_last_row_wins_for_duplicate_names():
+    """The committed trajectory keeps old rows alongside re-measured ones;
+    the most recent (last) measurement is the baseline."""
+    base = [_row("a", 100_000.0), _row("a", 2000.0)]
+    new = [_row("a", 3000.0)]
+    res = check_regression.compare(new, base, max_slowdown=2.0, min_us=100.0)
+    assert res[0]["ratio"] == pytest.approx(1.5)
+    assert not res[0]["failed"]
+
+
+def test_main_exit_codes(tmp_path):
+    base = tmp_path / "base.json"
+    new = tmp_path / "new.json"
+    base.write_text(json.dumps([_row("a", 2000.0)]))
+    new.write_text(json.dumps([_row("a", 2100.0)]))
+    assert check_regression.main([str(new), str(base)]) == 0
+    new.write_text(json.dumps([_row("a", 50_000.0)]))
+    assert check_regression.main([str(new), str(base)]) == 1
+    assert check_regression.main(
+        [str(new), str(base), "--max-slowdown", "100"]) == 0

@@ -1,0 +1,135 @@
+"""The compiled-program cache (PR 5 tentpole): keying, sharing, validation.
+
+Satellite contract: two equal-by-value ``PsramConfig``s hit the same cache
+entry; a mutated/distinct config misses; cache hits return the *identical*
+compiled callable (no silent config aliasing); and the O(1) validation fast
+path still rejects non-canonical op sequences.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.psram import PsramConfig
+from repro.core.quantization import ADCConfig
+from repro.core.schedule import (
+    Drive,
+    StoreTile,
+    TileProgram,
+    build_matmul_program,
+    clear_program_cache,
+    compiled_matmul_executor,
+    execute,
+    execute_reference,
+    program_cache_stats,
+)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    clear_program_cache()
+    yield
+    clear_program_cache()
+
+
+def test_equal_configs_share_one_program():
+    c1 = PsramConfig(rows=32, word_cols=8, wavelengths=8)
+    c2 = PsramConfig(rows=32, word_cols=8, wavelengths=8)
+    assert c1 is not c2 and c1 == c2
+    p1 = build_matmul_program(40, 70, 20, c1)
+    p2 = build_matmul_program(40, 70, 20, c2)
+    assert p1 is p2                       # one entry, shared program object
+    stats = program_cache_stats()
+    assert stats.hits == 1 and stats.misses == 1 and stats.currsize == 1
+
+
+def test_distinct_config_misses():
+    c1 = PsramConfig(rows=32, word_cols=8, wavelengths=8)
+    for changed in (
+        dataclasses.replace(c1, wavelengths=4),
+        dataclasses.replace(c1, rows=16),
+        dataclasses.replace(c1, adc=ADCConfig(bits=8)),
+    ):
+        p1 = build_matmul_program(40, 70, 20, c1)
+        p2 = build_matmul_program(40, 70, 20, changed)
+        assert p1 is not p2
+        assert p1.config != p2.config     # no config aliasing across entries
+    assert program_cache_stats().currsize == 4
+
+
+def test_distinct_shape_misses():
+    cfg = PsramConfig(rows=32, word_cols=8, wavelengths=8)
+    assert build_matmul_program(40, 70, 20, cfg) \
+        is not build_matmul_program(40, 70, 21, cfg)
+
+
+def test_cache_hits_return_identical_compiled_callable():
+    c1 = PsramConfig(rows=32, word_cols=8, wavelengths=8)
+    c2 = PsramConfig(rows=32, word_cols=8, wavelengths=8)
+    e1 = compiled_matmul_executor(24, 40, 16, c1)
+    e2 = compiled_matmul_executor(24, 40, 16, c2)
+    assert e1 is e2
+    e3 = compiled_matmul_executor(
+        24, 40, 16, dataclasses.replace(c1, wavelengths=4))
+    assert e3 is not e1
+
+
+def test_validation_fast_path_and_rejection():
+    cfg = PsramConfig(rows=32, word_cols=8, wavelengths=8)
+    prog = build_matmul_program(24, 40, 16, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(0), (24, 40))
+    w = jax.random.normal(jax.random.PRNGKey(1), (40, 16))
+    execute(prog, x, w)                   # canonical: accepted (identity path)
+    # a structurally-equal program built by hand (not the cached tuple) must
+    # still validate — equality, not identity, is the contract
+    clone = TileProgram(config=cfg, ops=tuple(list(prog.ops)),
+                        shape=prog.shape)
+    assert clone.ops is not prog.ops
+    np.testing.assert_array_equal(np.asarray(execute(clone, x, w)),
+                                  np.asarray(execute(prog, x, w)))
+    # a reordered op sequence must still raise
+    bad = TileProgram(config=cfg, ops=tuple(reversed(prog.ops)),
+                      shape=prog.shape)
+    with pytest.raises(ValueError, match="non-canonical"):
+        execute(bad, x, w)
+    # and so must re-sliced geometry (same op types, wrong drive slices)
+    ops = list(prog.ops)
+    for i, op in enumerate(ops):
+        if isinstance(op, Drive):
+            ops[i] = dataclasses.replace(op, m0=op.m0 + 1, m1=op.m1 + 1)
+            break
+    with pytest.raises(ValueError, match="non-canonical"):
+        execute(TileProgram(config=cfg, ops=tuple(ops), shape=prog.shape),
+                x, w)
+
+
+def test_compiled_executor_envelope_and_determinism():
+    """compiled=True lands within the documented ~1e-7 envelope of the eager
+    bit-identity oracle, and is itself deterministic call to call."""
+    cfg = PsramConfig(rows=32, word_cols=8, wavelengths=8)
+    prog = build_matmul_program(48, 70, 24, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (48, 70))
+    w = jax.random.normal(jax.random.PRNGKey(3), (70, 24))
+    eager = execute(prog, x, w)
+    fast = execute(prog, x, w, compiled=True)
+    rel = float(jnp.linalg.norm(fast - eager) / jnp.linalg.norm(eager))
+    assert rel < 1e-6, rel
+    np.testing.assert_array_equal(
+        np.asarray(fast), np.asarray(execute(prog, x, w, compiled=True)))
+    # the eager path stays the bit-identity oracle vs the per-cycle physics
+    np.testing.assert_array_equal(np.asarray(eager),
+                                  np.asarray(execute_reference(prog, x, w)))
+
+
+def test_store_tile_geometry_is_preserved_by_cache():
+    """Golden: the cached canonical nest is the same schedule PR 2 pinned."""
+    cfg = PsramConfig(rows=16, word_cols=8, wavelengths=4)
+    prog = build_matmul_program(5, 20, 9, cfg)
+    stores = [op for op in prog.ops if isinstance(op, StoreTile)]
+    assert [(s.k0, s.k1, s.n0, s.n1) for s in stores] == [
+        (0, 16, 0, 8), (0, 16, 8, 9), (16, 20, 0, 8), (16, 20, 8, 9)]
+    drives = [op for op in prog.ops if isinstance(op, Drive)]
+    assert all(d.cycles == 1 for d in drives)
+    assert {(d.m0, d.m1) for d in drives} == {(0, 4), (4, 5)}

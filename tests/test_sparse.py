@@ -266,6 +266,107 @@ def test_scheduled_mttkrp_delegates_and_scales():
     np.testing.assert_array_equal(np.asarray(big), np.asarray(ref))
 
 
+# ------------------------------------- compiled executor (PR 5 tentpole)
+
+def test_exec_chunking_never_changes_a_bit():
+    """The eager executor's scan chunk size is a wall-clock knob only: any
+    ``exec_blocks`` yields bit-identical results (the fold order is the
+    global segment-sum order regardless of how many blocks one step
+    drains), for both the exact and the quantized chain."""
+    coo = powerlaw_coo(jax.random.PRNGKey(11), (60, 40, 30), nnz=2000, rank=4)
+    csf = csf_for_mode(coo, 0)
+    fs = _factors(coo.shape, 9, seed=3)
+    s = csf.to_coo()
+    want = mttkrp_sparse(s.indices, s.values, fs, 0, 60)
+    want_p = mttkrp_sparse_psram(s.indices, s.values, fs, 0, 60)
+    for eb in (1, 3, 17, 1000):
+        got = stream_mttkrp(csf, fs, SMALL, exec_blocks=eb)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        got_p = stream_mttkrp(csf, fs, SMALL, psram=True, exec_blocks=eb)
+        np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
+
+
+def test_compiled_bit_identical_to_blocked_reference():
+    """The compiled scan-lowered executor == the flat blocked reference
+    (``mttkrp_sparse_blocked``), bit for bit — two genuinely different
+    lowerings (lax.scan carry vs one batched contraction) of the same
+    blocked-segment fold. Holds for the exact and the quantized chain, and
+    independently of the scan chunking."""
+    from repro.core.mttkrp import mttkrp_sparse_blocked
+    from repro.sparse import blocked_fold_reference
+
+    coo = powerlaw_coo(jax.random.PRNGKey(12), (80, 30, 25), nnz=3000,
+                       rank=4, alpha=1.2)
+    for mode in range(3):
+        csf = csf_for_mode(coo, mode)
+        fs = _factors(coo.shape, 6, seed=7)
+        s = csf.to_coo()
+        for psram in (False, True):
+            ref = blocked_fold_reference(csf, fs, SMALL, psram=psram)
+            ref2 = mttkrp_sparse_blocked(s.indices, s.values, fs, mode,
+                                         coo.shape[mode], SMALL, psram=psram)
+            np.testing.assert_array_equal(np.asarray(ref), np.asarray(ref2))
+            for eb in (2, 50):
+                got = stream_mttkrp(csf, fs, SMALL, psram=psram,
+                                    compiled=True, exec_blocks=eb)
+                np.testing.assert_array_equal(np.asarray(got),
+                                              np.asarray(ref))
+
+
+def test_compiled_envelope_vs_eager_oracle():
+    """The compiled fold is exact arithmetic reassociated: tight relative
+    envelope vs the eager bit-identity oracle, far inside the ADC envelope
+    the lossy backends document."""
+    coo = powerlaw_coo(jax.random.PRNGKey(13), (2000, 1500, 1200),
+                       nnz=60_000, rank=6, alpha=1.1)
+    csf = csf_for_mode(coo, 0)
+    fs = _factors(coo.shape, 16, seed=5)
+    eager = stream_mttkrp(csf, fs)
+    fast = stream_mttkrp(csf, fs, compiled=True)
+    rel = float(jnp.linalg.norm(fast - eager) / jnp.linalg.norm(eager))
+    assert rel < 1e-5, rel
+
+
+def test_compiled_mode_generic_4mode():
+    from repro.sparse import blocked_fold_reference
+
+    coo = powerlaw_coo(jax.random.PRNGKey(14), (12, 9, 7, 5), nnz=250, rank=3)
+    fs = _factors(coo.shape, 4, seed=5)
+    for mode in range(4):
+        csf = csf_for_mode(coo, mode)
+        got = stream_mttkrp(csf, fs, SMALL, compiled=True)
+        np.testing.assert_array_equal(
+            np.asarray(got),
+            np.asarray(blocked_fold_reference(csf, fs, SMALL)))
+        dense = mttkrp_dense(coo.to_dense(), list(fs), mode)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(dense),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_compiled_layout_cached_on_csf():
+    """The padded block stacks and segment maps are per-tensor,
+    factor-independent preprocessing: one object per (rows, chunk) key,
+    reused across calls (the CP-ALS sweep contract)."""
+    coo = powerlaw_coo(jax.random.PRNGKey(15), (30, 20, 10), nnz=400, rank=3)
+    csf = csf_for_mode(coo, 0)
+    fs = _factors(coo.shape, 4, seed=1)
+    stream_mttkrp(csf, fs, SMALL, compiled=True)
+    keys = [k for k in csf.__dict__ if isinstance(k, tuple)
+            and k[0] == "_stream_compiled_layout"]
+    assert len(keys) == 1
+    layout = csf.__dict__[keys[0]]
+    stream_mttkrp(csf, _factors(coo.shape, 4, seed=9), SMALL, compiled=True)
+    assert csf.__dict__[keys[0]] is layout
+    # retuning exec_blocks REPLACES the stack (one O(nnz) copy per rows key,
+    # not one per chunking value) and never changes a result bit
+    a = stream_mttkrp(csf, fs, SMALL, compiled=True, exec_blocks=2)
+    assert len([k for k in csf.__dict__ if isinstance(k, tuple)
+                and k[0] == "_stream_compiled_layout"]) == 1
+    assert csf.__dict__[keys[0]] is not layout
+    np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(stream_mttkrp(csf, fs, SMALL, compiled=True)))
+
+
 # ------------------------------------------------------- schedule pricing
 
 def test_stream_program_golden_cycles():

@@ -64,11 +64,25 @@ def main(argv=None) -> int:
     ap.add_argument("--min-us", type=float, default=1000.0,
                     help="ignore rows faster than this in either file — "
                          "µs-scale rows are timer noise (default 1000)")
+    ap.add_argument("--require-prefixes", default=None,
+                    help="comma-separated name prefixes the NEW file must "
+                         "contain at least one row of (e.g. "
+                         "pallas_,roofline_) — a bench that silently stops "
+                         "emitting its rows fails here instead of slipping "
+                         "past the name-matched comparison")
     args = ap.parse_args(argv)
     with open(args.new) as f:
         new_rows = json.load(f)
     with open(args.baseline) as f:
         base_rows = json.load(f)
+    if args.require_prefixes:
+        names = [r["name"] for r in new_rows]
+        missing = [p for p in args.require_prefixes.split(",")
+                   if p and not any(n.startswith(p) for n in names)]
+        if missing:
+            print(f"{args.new} has no row named with required prefix(es): "
+                  f"{', '.join(missing)}")
+            return 1
     backends = set(args.backends.split(",")) if args.backends else None
     results = compare(new_rows, base_rows, args.max_slowdown, backends,
                       args.min_us)

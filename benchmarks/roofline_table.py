@@ -1,83 +1,191 @@
-"""Render the §Roofline table for EXPERIMENTS.md from results/dryrun/*.json."""
+"""Roofline table — achieved wall-clock vs the analytical §V bound, per
+backend, per workload, straight from the registry.
+
+For each workload (reference matmul, dense MTTKRP, power-law sparse stream)
+and each selected backend that can execute it, this measures the achieved
+time through the backend front door (``backends.get(name)``), prices the
+same workload on the ``"analytical"`` backend, and emits one row::
+
+    roofline_{workload}_{backend}[_smoke]  ,  achieved_us  ,
+        bound={analytical}us frac={bound/achieved}
+
+``frac`` is the roofline fraction: how much of the modeled pSRAM engine's
+throughput this container's JAX-CPU execution of the same arithmetic
+achieves. It is tiny by construction (the bound models a 52-channel
+20 GHz photonic array) — the point of the table is the *trajectory*: the
+fused Pallas kernel family should move ``frac`` up PR over PR, and the CI
+smoke rows (``--smoke``) put that trajectory under the regression gate.
+
+Options:
+  --backend NAME   repeatable; default: exact, psram-scheduled,
+                   psram-stream, pallas (each in its compiled/fast mode
+                   when the constructor takes ``compiled=``)
+  --smoke          small shapes + ``_smoke`` row suffix (CI mode)
+  --json PATH      write rows as the BENCH_psram.json row schema
+  --tune           let the pallas backend autotune the sparse stream
+                   (sweeps exec-block candidates in-process, caches winner)
+  --tune-cache P   after the run, save the autotuner winner cache to P
+                   (ship it: ``kernels.load_cache(P)`` seeds future runs)
+"""
 from __future__ import annotations
 
-import glob
+import argparse
 import json
-import os
-import sys
+import time
 
-SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
-ARCH_ORDER = [
-    "chatglm3-6b", "gemma2-27b", "granite-8b", "deepseek-7b",
-    "seamless-m4t-large-v2", "jamba-1.5-large", "qwen2-vl-7b",
-    "granite-moe-1b-a400m", "dbrx-132b", "mamba2-370m",
-]
+import jax
+import jax.numpy as jnp
 
+DEFAULT_BACKENDS = ("exact", "psram-scheduled", "psram-stream", "pallas")
 
-def fmt_s(x):
-    if x is None:
-        return "-"
-    if x >= 1:
-        return f"{x:.2f}s"
-    return f"{x*1e3:.1f}ms"
+ROWS: list[dict] = []
 
 
-def load(outdir):
-    rows = {}
-    for p in glob.glob(os.path.join(outdir, "*.json")):
-        if p.endswith("summary.json"):
-            continue
-        d = json.load(open(p))
-        if "skipped" in d:
-            continue
-        rows[(d["arch"], d["shape"], d["mesh"])] = d
-    return rows
+def _time(fn, n=3, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6  # us
 
 
-def _recompute_fraction(d):
-    """Fill ideal_s/roofline_fraction for result files from older runs."""
-    if "ideal_s" in d:
-        return d
-    from repro.launch.roofline import ideal_seconds
-    from repro.launch.shapes import SHAPES
-    from repro.models.registry import get_config
-    cfg = get_config(d["arch"].replace("-", "_").replace("1.5", "1p5"))
-    s = SHAPES[d["shape"]]
-    ideal = ideal_seconds(cfg, s.kind, s.seq_len, s.global_batch, d["chips"])
-    r = d["roofline"]
-    worst = max(r["compute_s"], r["memory_s"], r["collective_s"])
-    d["ideal_s"] = ideal
-    d["roofline_fraction"] = ideal / worst if worst else None
-    return d
+def row(name, us, derived, backend):
+    ROWS.append({"name": name, "us_per_call": round(us, 1),
+                 "derived": str(derived), "backend": backend})
+    print(f"{name},{us:.1f},{derived},{backend}")
 
 
-def table(outdir="results/dryrun", mesh="16x16"):
-    rows = {k: _recompute_fraction(v) for k, v in load(outdir).items()}
-    print("| arch | shape | fsdp | mem/dev | compute | memory | collective | dominant | MODEL_FLOPs/HLO | roofline frac | one-line next move |")
-    print("|---|---|---|---|---|---|---|---|---|---|---|")
-    moves = {
-        "compute": "raise MXU occupancy (larger per-device microbatch / fuse)",
-        "memory": "cut bytes: bf16 residuals, fuse epilogues, int8 weights (pSRAM path)",
-        "collective": "halve wire bytes: seq-sharded residuals (RS+AG), fewer TP hops",
-    }
-    for arch in ARCH_ORDER:
-        for shape in SHAPE_ORDER:
-            d = rows.get((arch, shape, mesh))
-            if d is None:
-                print(f"| {arch} | {shape} | - | - | - | - | - | skipped | - | - | long_500k needs sub-quadratic attn |")
+def _get(name, autotune=False):
+    """Each backend in its fast mode: ``compiled=True`` where the
+    constructor takes it (the TypeError contract says it doesn't exist
+    elsewhere), ``autotune=`` only where it exists (pallas)."""
+    from repro import backends
+
+    kwargs = {"compiled": True}
+    if autotune and name == "pallas":
+        kwargs["autotune"] = True
+    while True:
+        try:
+            return backends.get(name, **kwargs)
+        except TypeError:
+            if not kwargs:
+                raise
+            kwargs.pop(next(iter(kwargs)))
+
+
+def _workloads(smoke: bool):
+    """(key, descriptor-for-analytical, runnable(backend) | None) triples.
+
+    ``runnable`` returns a zero-arg closure executing the workload through
+    the backend front door, or None when the backend's capabilities exclude
+    the workload kind.
+    """
+    from repro.backends.workload import MatmulWorkload
+    from repro.core.perf_model import MTTKRPWorkload, SparseMTTKRPWorkload
+    from repro.sparse import csf_for_mode, powerlaw_coo
+
+    out = []
+
+    m, k, n = (64, 128, 32) if smoke else (256, 512, 128)
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+
+    def run_matmul(be):
+        if not (be.capabilities().executes and be.capabilities().matmul):
+            return None
+        return lambda: be.matmul(x, w)
+
+    out.append((f"matmul_{m}x{k}x{n}", MatmulWorkload(m=m, k=k, n=n),
+                run_matmul))
+
+    i, j, kk = (64, 32, 48) if smoke else (256, 64, 128)
+    rank = 32
+    xd = jax.random.normal(jax.random.PRNGKey(0), (i, j, kk))
+    fsd = tuple(
+        jax.random.normal(jax.random.PRNGKey(d + 1), (s, rank))
+        for d, s in enumerate((i, j, kk))
+    )
+
+    def run_dense(be):
+        caps = be.capabilities()
+        # caps.matmul filters out psram-stream, whose dense path would
+        # first explode the tensor into a CSF of every element
+        if not (caps.executes and caps.dense and caps.matmul):
+            return None
+        return lambda: be.mttkrp(xd, fsd, 0)
+
+    out.append((f"mttkrp_dense_{i}x{j}x{kk}",
+                MTTKRPWorkload(i=i, j=j, k=kk, rank=rank), run_dense))
+
+    shape = (400, 300, 200) if smoke else (2000, 1500, 1200)
+    nnz = max(1000, int(shape[0] * shape[1] * shape[2] * 1e-3))
+    coo = powerlaw_coo(jax.random.PRNGKey(0), shape, nnz=nnz,
+                       rank=8, alpha=1.1)
+    csf = csf_for_mode(coo, 0)
+    fss = tuple(
+        jax.random.normal(jax.random.PRNGKey(d + 1), (s, rank))
+        for d, s in enumerate(shape)
+    )
+
+    def run_sparse(be):
+        caps = be.capabilities()
+        if not (caps.executes and caps.sparse):
+            return None
+        return lambda: be.mttkrp(csf, fss, 0)
+
+    out.append((f"sparse_stream_nnz{coo.nnz}",
+                SparseMTTKRPWorkload(fiber_lengths=csf.fiber_lengths(),
+                                     rank=rank), run_sparse))
+    return out
+
+
+def main(argv=None) -> None:
+    from repro import backends
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", action="append", default=None,
+                    metavar="NAME", choices=backends.list_backends(),
+                    help="backend to measure (repeatable; default: "
+                         + ", ".join(DEFAULT_BACKENDS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: small shapes, rows suffixed _smoke")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as JSON (BENCH row schema)")
+    ap.add_argument("--tune", action="store_true",
+                    help="autotune the pallas sparse stream before timing")
+    ap.add_argument("--tune-cache", metavar="PATH", default=None,
+                    help="save the autotuner winner cache here afterwards")
+    args = ap.parse_args(argv)
+
+    names = tuple(args.backend) if args.backend else DEFAULT_BACKENDS
+    suffix = "_smoke" if args.smoke else ""
+    analytical = backends.get("analytical")
+
+    print("name,us_per_call,derived,backend")
+    for key, descriptor, runnable in _workloads(args.smoke):
+        bound_us = analytical.cost(descriptor).time_s * 1e6
+        for name in names:
+            be = _get(name, autotune=args.tune)
+            fn = runnable(be)
+            if fn is None:
                 continue
-            r = d["roofline"]
-            ratio = d["useful_flops_ratio"]
-            frac = d["roofline_fraction"]
-            print(
-                f"| {arch} | {shape} | {'Y' if d['fsdp'] else 'N'} "
-                f"| {d['memory']['per_device_total_gb']:.1f}GB "
-                f"| {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
-                f"| {fmt_s(r['collective_s'])} | {r['dominant']} "
-                f"| {ratio and round(ratio, 2)} | {frac and round(frac, 3)} "
-                f"| {moves[r['dominant']]} |"
-            )
+            us = _time(fn)
+            row(f"roofline_{key}_{name}{suffix}", us,
+                f"bound={bound_us:.4g}us frac={bound_us / us:.2e}", name)
+
+    if args.tune_cache:
+        from repro.kernels.autotune import cache_stats, save_cache
+
+        save_cache(args.tune_cache)
+        print(f"# saved autotune cache ({cache_stats()[0]} winners) "
+              f"to {args.tune_cache}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(ROWS, f, indent=2)
+        print(f"# wrote {len(ROWS)} rows to {args.json}")
 
 
 if __name__ == "__main__":
-    table(*sys.argv[1:])
+    main()

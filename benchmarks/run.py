@@ -52,6 +52,25 @@ def _time(fn, *args, n=5, warmup=2):
     return (time.perf_counter() - t0) / n * 1e6  # us
 
 
+def _time_interleaved(fns, n=5, warmup=1):
+    """Per-call medians of several callables timed in alternating rounds.
+
+    Back-to-back ``_time(a); _time(b)`` windows let machine-state drift
+    (frequency scaling, cache pressure from a neighbour) bias a/b speedup
+    ratios; interleaving a,b,a,b samples both under the same conditions.
+    """
+    for fn in fns:
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+    samples = [[] for _ in fns]
+    for _ in range(n):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            samples[i].append(time.perf_counter() - t0)
+    return tuple(sorted(s)[n // 2] * 1e6 for s in samples)
+
+
 def _model_time(fn, *args, n=10):
     """Wall time of a pure-python/numpy model evaluation, in us.
 
@@ -344,6 +363,116 @@ def bench_sparse_mttkrp(smoke: bool = False):
         f"{sb.sustained_petaops:.4f} PetaOps occ={sb.wavelength_occupancy:.3f}")
 
 
+# ------------------------------------- fused Pallas kernel family (PR 6)
+def bench_pallas_fused(smoke: bool = False):
+    """The fused streaming-MTTKRP kernel family vs the PR-5 compiled scan
+    executors — the pallas backend's speed-champion claim, measured.
+
+    Sparse: the fused kernel (int8 prequantized gathers + Hadamard chain +
+    one-hot segment contraction + ADC epilogue, one jitted scan over exec
+    blocks) against ``stream_mttkrp(..., psram=True, compiled=True)`` on
+    the same CSF — the like-for-like baseline: both drain the identical
+    blocking through the array numerics, but the scan executor re-quantizes
+    every gathered chain product per block while the fused kernel stores
+    the factors quantized once. The exact-arithmetic scan's time rides
+    along in ``derived`` for context (the fused kernel beats even that:
+    int8 gathers move a quarter of the bytes). Dense: the one-jit fused
+    drive chain against the compiled schedule executor on the reference
+    256x512 @ 512x128 matmul. Both rows carry the speedup in ``derived``;
+    the acceptance bar is 1.3x.
+    """
+    if not selected("pallas"):
+        return
+    from repro import backends
+    from repro.kernels.ops import fused_stream_mttkrp_op
+    from repro.sparse import csf_for_mode, powerlaw_coo, stream_mttkrp
+
+    cfg = PsramConfig()
+    suffix = "_smoke" if smoke else ""
+    shape = (400, 300, 200) if smoke else (2000, 1500, 1200)
+    size = shape[0] * shape[1] * shape[2]
+    rank = 32
+    dens = 1e-3
+    nnz = max(1000, int(size * dens))
+    coo = powerlaw_coo(jax.random.PRNGKey(0), shape, nnz=nnz,
+                       rank=8, alpha=1.1)
+    csf = csf_for_mode(coo, 0)
+    fs = tuple(
+        jax.random.normal(jax.random.PRNGKey(d + 1), (s, rank))
+        for d, s in enumerate(shape)
+    )
+    s = csf.to_coo()
+    exact = mttkrp_sparse(s.indices, s.values, fs, 0, shape[0])
+
+    # timed back-to-back, not interleaved: the psram scan's per-block
+    # requantization churns ~2.5s of (E,rows,R) intermediates per call and
+    # would hand every follow-up executor a cold LLC
+    f_scan = lambda: stream_mttkrp(csf, fs, cfg, psram=True,
+                                   adc_bits=cfg.adc.bits, compiled=True)
+    us_scan = _time(f_scan, n=3, warmup=1)
+    f_scan_exact = lambda: stream_mttkrp(csf, fs, cfg, compiled=True)
+    us_scan_exact = _time(f_scan_exact, n=3, warmup=1)
+    f_fused = lambda: fused_stream_mttkrp_op(csf, fs, cfg,
+                                             adc_bits=cfg.adc.bits)
+    us_fused = _time(f_fused, n=3, warmup=1)
+    got = f_fused()
+    rel = float(jnp.linalg.norm(got - exact) / jnp.linalg.norm(exact))
+    row(f"pallas_fused_stream_d{dens:g}_nnz{coo.nnz}{suffix}", us_fused,
+        f"rel_vs_exact={rel:.1e} speedup_vs_scan={us_scan/us_fused:.2f}x "
+        f"(psram_scan={us_scan:.0f}us exact_scan={us_scan_exact:.0f}us "
+        f"speedup_vs_exact_scan={us_scan_exact/us_fused:.2f}x)", "pallas")
+    # tuned variant: the autotuner sweeps exec-block candidates in-process
+    # and caches the winner per (shape, nnz-profile, config) key
+    f_tuned = lambda: fused_stream_mttkrp_op(csf, fs, cfg,
+                                             adc_bits=cfg.adc.bits,
+                                             autotune=True)
+    f_tuned()  # first call pays the sweep; steady-state is what we time
+    us_tuned = _time(f_tuned, n=3, warmup=1)
+    from repro.kernels.autotune import cache_stats
+    row(f"pallas_fused_stream_tuned_d{dens:g}_nnz{coo.nnz}{suffix}",
+        us_tuned,
+        f"speedup_vs_scan={us_scan/us_tuned:.2f}x "
+        f"speedup_vs_exact_scan={us_scan_exact/us_tuned:.2f}x "
+        f"winners={cache_stats()[0]}", "pallas")
+
+    # dense: fused bit-plane matmul (xla lowering) vs compiled scheduled
+    # executor on the reference shape
+    from repro.core.schedule import build_matmul_program, execute
+
+    m, k, n = (64, 128, 32) if smoke else (256, 512, 128)
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+    prog = build_matmul_program(m, k, n, cfg)
+    f_sched = lambda: execute(prog, x, w, compiled=True)
+    f_mm = lambda: psram_matmul_op(x, w, adc_bits=cfg.adc.bits,
+                                   backend="xla")
+    us_sched, us_mm = _time_interleaved((f_sched, f_mm), n=9, warmup=1)
+    exact_mm = x @ w
+    got_mm = f_mm()
+    rel_mm = float(jnp.linalg.norm(got_mm - exact_mm)
+                   / jnp.linalg.norm(exact_mm))
+    row(f"pallas_fused_matmul_{m}x{k}x{n}{suffix}", us_mm,
+        f"rel_vs_exact={rel_mm:.1e} speedup_vs_scheduled="
+        f"{us_sched/us_mm:.2f}x (scheduled={us_sched:.0f}us)", "pallas")
+
+    # dense MTTKRP: the quantized-KR fused kernel (xla lowering) vs the
+    # exact einsum — rel documents the 8-bit+ADC envelope on this shape
+    from repro.kernels.ops import mttkrp_psram_op
+
+    i, j, kk = (64, 32, 48) if smoke else (256, 64, 128)
+    xt = jax.random.normal(jax.random.PRNGKey(0), (i, j, kk))
+    b = jax.random.normal(jax.random.PRNGKey(1), (j, rank))
+    c = jax.random.normal(jax.random.PRNGKey(2), (kk, rank))
+    f_dm = lambda: mttkrp_psram_op(xt, b, c, backend="xla",
+                                   adc_bits=cfg.adc.bits)
+    us_dm = _time(f_dm, n=5, warmup=1)
+    want_dm = mttkrp_dense(xt, [jnp.zeros((i, rank)), b, c], 0)
+    rel_dm = float(jnp.linalg.norm(f_dm() - want_dm)
+                   / jnp.linalg.norm(want_dm))
+    row(f"pallas_fused_mttkrp_dense_{i}x{j}x{kk}{suffix}", us_dm,
+        f"rel_vs_exact={rel_dm:.1e}", "pallas")
+
+
 # ------------------------------------------ backend matrix (registry tour)
 def bench_backend_matrix(smoke: bool = False):
     """One MTTKRP across every registered backend via repro.api: wall-clock,
@@ -432,6 +561,7 @@ def main(argv=None) -> None:
     bench_energy()
     if selected("psram-stream", "analytical"):
         bench_sparse_mttkrp(smoke=args.smoke)
+    bench_pallas_fused(smoke=args.smoke)
     bench_backend_matrix(smoke=args.smoke)
     bench_scaling()
     if args.json:

@@ -23,7 +23,12 @@ from .base import (
     register,
     resolve_config,
 )
-from .lowering import KERNEL_LOWERINGS, resolve_lowering
+from .lowering import (
+    KERNEL_LOWERINGS,
+    RESOLVED_LOWERINGS,
+    resolve_exec_lowering,
+    resolve_lowering,
+)
 from .workload import (
     MatmulWorkload,
     MTTKRPProblem,
@@ -45,7 +50,9 @@ __all__ = [
     "get",
     "list_backends",
     "normalize_mttkrp_data",
+    "RESOLVED_LOWERINGS",
     "register",
     "resolve_config",
+    "resolve_exec_lowering",
     "resolve_lowering",
 ]

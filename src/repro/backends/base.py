@@ -93,6 +93,10 @@ class Capabilities:
                                    # same arithmetic, reassociated fold /
                                    # fused dequant chain — bit_exact drops,
                                    # the eager default stays the oracle
+    autotune: bool = False         # tile/chunk shapes come from the
+                                   # kernels.autotune winner cache (swept +
+                                   # cached per (shape, nnz-profile,
+                                   # config)); off = deterministic heuristic
     description: str = ""
 
 

@@ -250,24 +250,43 @@ class PsramStreamBackend(Backend):
 
 @register("pallas")
 class PallasBackend(Backend):
-    """The Pallas TPU kernels (interpret mode off-TPU, same kernel body):
-    bit-plane pSRAM matmul, fused dense MTTKRP, blocked segment-sum stream.
-    The blocked stream reassociates float adds, so this backend is allclose
-    — not bit-equal — to its oracles (``bit_exact=False``)."""
+    """The fused Pallas kernel family (one kernel body per op, lowered to
+    real Pallas on TPU, a fused XLA twin off-TPU, interpret mode for
+    validation): bit-plane pSRAM matmul, quantized matricized-KR dense
+    MTTKRP, and the fused streaming sparse MTTKRP (chain + gather-mask
+    contraction + ADC epilogue + cross-block carry in one kernel).
 
-    def __init__(self, config=None, lowering: str = "auto"):
+    The default ``compiled=True`` runs that family — the speed-champion
+    configuration the BENCH trajectory tracks. ``compiled=False`` keeps the
+    legacy per-op path (exact-chain blocked segment-sum stream, exact dense
+    kernel). ``autotune=True`` lets ``kernels.autotune`` sweep and cache
+    chunk/tile shapes per ``(shape, nnz-profile, PsramConfig)``; off, the
+    deterministic heuristic is used, so untuned runs never regress.
+
+    Lowering (env/platform probe included) resolves ONCE at construction;
+    every call dispatches on the stored resolved string. The fused paths
+    reassociate float adds vs their oracles (``bit_exact=False``) and stay
+    within the documented ADC envelope (``rel_tol=0.05``) vs ``exact``.
+    """
+
+    def __init__(self, config=None, lowering: str = "auto",
+                 compiled: bool = True, autotune: bool = False):
         super().__init__(config)
-        from .lowering import resolve_lowering
+        from .lowering import resolve_exec_lowering, resolve_lowering
 
-        # resolve once at construction so a bad string fails fast
-        resolve_lowering(lowering)
-        self.lowering = lowering
+        self.compiled = bool(compiled)
+        self.autotune = bool(autotune)
+        self.lowering = (resolve_exec_lowering(lowering) if self.compiled
+                         else resolve_lowering(lowering))
 
     def capabilities(self) -> Capabilities:
         return Capabilities(
             executes=True, cost_model=False, matmul=True, lossy=True,
             bit_exact=False, rel_tol=0.05, prefers_csf=True,
-            description="Pallas kernels (bit-plane matmul, fused/blocked MTTKRP)",
+            compiled=self.compiled, autotune=self.autotune,
+            description="fused Pallas kernel family (bit-plane matmul, "
+                        "quantized KR dense, fused streaming sparse)"
+                        + ("" if self.compiled else " [legacy per-op]"),
         )
 
     def matmul(self, x, w):
@@ -279,17 +298,25 @@ class PallasBackend(Backend):
     def mttkrp(self, data, factors, mode: int):
         norm = normalize_mttkrp_data(data)
         if norm.kind == "dense":
-            from repro.kernels.ops import mttkrp_op
+            from repro.kernels.ops import mttkrp_op, mttkrp_psram_op
 
             self._require("N-mode dense MTTKRP (3-mode kernel)",
                           norm.dense.ndim == 3)
             others = [d for d in range(3) if d != mode]
             xt = jnp.transpose(norm.dense, [mode] + others)
-            return mttkrp_op(xt, factors[others[0]], factors[others[1]],
-                             backend=self.lowering)
+            op = mttkrp_psram_op if self.compiled else mttkrp_op
+            return op(xt, factors[others[0]], factors[others[1]],
+                      backend=self.lowering)
+        csf = mode_csf(norm, mode)
+        if self.compiled:
+            from repro.kernels.ops import fused_stream_mttkrp_op
+
+            return fused_stream_mttkrp_op(
+                csf, tuple(factors), self.config,
+                adc_bits=self.config.adc.bits, backend=self.lowering,
+                autotune=self.autotune)
         from repro.sparse.stream import stream_mttkrp_blocked
 
-        csf = mode_csf(norm, mode)
         return stream_mttkrp_blocked(
             csf, tuple(factors), self.config, backend=self.lowering)
 

@@ -197,9 +197,15 @@ def program_cache_stats():
 
 
 def clear_program_cache() -> None:
-    """Drop cached canonical programs and compiled executors (tests)."""
+    """Drop cached canonical programs and compiled executors (tests) — and
+    the kernel family's caches that live alongside them (autotuned winners
+    + compiled fused-stream executors), so one call resets every keyed
+    compilation cache in the repo."""
     _canonical_matmul_program.cache_clear()
     compiled_matmul_executor.cache_clear()
+    from repro.kernels.autotune import clear_autotune_cache
+
+    clear_autotune_cache()
 
 
 def stream_block_layout(fiber_lengths, rows: int):

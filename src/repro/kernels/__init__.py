@@ -1,12 +1,27 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
   psram_matmul     — the array's bit-plane int8 MAC + fused ADC epilogue
-  mttkrp           — fused MTTKRP, Khatri-Rao tiles formed in VMEM
+  mttkrp           — fused MTTKRP, Khatri-Rao tiles formed in VMEM; plus
+                     the quantized matricized-KR variant (int8 + ADC)
+  stream_mttkrp    — fused streaming sparse MTTKRP: chain + gather-mask
+                     contraction + ADC epilogue + cross-block carry in one
+                     kernel body, lowered to pallas / interpret / xla / ref
   flash_attention  — online-softmax attention for the 32k prefill shapes
+  autotune         — tile/chunk autotuner, winners cached per
+                     (shape, nnz-profile, PsramConfig)
 
-All validated on CPU via interpret=True against ref.py oracles.
+All validated on CPU via interpret=True against ref.py oracles; the xla
+lowerings are the fast off-TPU execution paths.
 """
+from .autotune import TuneKey, clear_autotune_cache, load_cache, save_cache
 from .flash_attention import flash_attention
-from .mttkrp import mttkrp_fused
-from .ops import flash_attention_op, mttkrp_op, psram_matmul_op
-from .psram_matmul import psram_matmul
+from .mttkrp import mttkrp_fused, mttkrp_psram_fused
+from .ops import (
+    flash_attention_op,
+    fused_stream_mttkrp_op,
+    mttkrp_op,
+    mttkrp_psram_op,
+    psram_matmul_op,
+)
+from .psram_matmul import psram_matmul, psram_matmul_xla
+from .stream_mttkrp import fused_stream_mttkrp

@@ -1,53 +1,221 @@
 """Jit'd public wrappers around the Pallas kernels.
 
 Each op resolves its lowering through the backend registry's shared
-resolver (``repro.backends.lowering``): real Pallas on TPU, interpret mode
-on CPU (bit-identical kernel body, Python-executed — used for validation),
-and the pure-jnp oracle from ref.py via ``backend="ref"``. Unknown strings
-raise instead of silently taking the Pallas path (they used to). The
-registry's ``"pallas"`` backend wraps these ops for the unified
+resolver (``repro.backends.lowering``) and then dispatches through an
+explicit per-op table: real Pallas on TPU, interpret mode for CPU
+validation (bit-identical kernel body, Python-executed), the fused XLA
+lowering where one exists (``"xla"`` — the same body as one jit, the fast
+off-TPU path), and the pure-jnp oracle from ref.py via ``backend="ref"``.
+
+Resolution is cheap and idempotent — already-resolved strings pass through
+— so backends resolve ONCE at construction (env/platform probe included)
+and hand the resolved string down per call. A resolved string with no
+dispatch entry raises ``RuntimeError`` naming the op and the table (the
+old code silently took the Pallas path for anything unknown that slipped
+past ``backends.resolve_lowering``).
+
+The registry's ``"pallas"`` backend wraps these ops for the unified
 ``repro.api`` front door.
 """
 from __future__ import annotations
+
+import functools
+import weakref
 
 import jax
 import jax.numpy as jnp
 
 from repro.backends.lowering import resolve_lowering
-from repro.core.quantization import quantize_symmetric
+from repro.core.quantization import QMAX, adc_transfer, quantize_symmetric
 from . import ref
 from .flash_attention import flash_attention
-from .mttkrp import mttkrp_fused
-from .psram_matmul import psram_matmul
+from .mttkrp import (
+    mttkrp_fused,
+    mttkrp_psram_fused,
+    mttkrp_psram_xla,
+)
+from .psram_matmul import psram_matmul, psram_matmul_xla
 from .segment_sum import blocked_segment_sum
+
+
+def _dispatch(op: str, table: dict, lowering: str):
+    """Pick a lowering implementation, loudly.
+
+    ``lowering`` must already be resolved; anything without a table entry —
+    including a resolvable-but-unimplemented lowering like ``"xla"`` on an
+    op that has no fused twin — is a RuntimeError naming the op, instead of
+    a silent fall-through to the Pallas path."""
+    try:
+        return table[lowering]
+    except KeyError:
+        raise RuntimeError(
+            f"kernel op {op!r} has no dispatch entry for resolved lowering "
+            f"{lowering!r}; implemented: {', '.join(table)}"
+        ) from None
+
+
+# ------------------------------------------------- store-then-drive cache
+#
+# The pSRAM array *stores* one operand (weights / KR factors) and *drives*
+# the other per cycle (§III): storing implies quantizing once, so the
+# stored operand's int8 conversion is cached on array identity and only the
+# driven operand is quantized per call. Weakref-guarded against id reuse;
+# every lowering consumes the SAME jitted quantization programs, keeping
+# the cross-lowering bit-identity contract (an eagerly-executed
+# ``quantize_symmetric`` rounds ``x / s`` differently from the jitted
+# reciprocal-rewritten division, so eager and jitted operands must never
+# mix).
+
+_STORE_CACHE: dict = {}
+_STORE_CACHE_MAX = 64
+
+
+def _stored(arrs: tuple, tag: str, build):
+    key = (tag,) + tuple(id(a) for a in arrs)
+    hit = _STORE_CACHE.get(key)
+    if hit is not None and all(r() is a for r, a in zip(hit[0], arrs)):
+        return hit[1]
+    val = build(*arrs)
+    if len(_STORE_CACHE) >= _STORE_CACHE_MAX:
+        _STORE_CACHE.clear()
+    _STORE_CACHE[key] = (tuple(weakref.ref(a) for a in arrs), val)
+    return val
+
+
+@jax.jit
+def _quant_drive_rows(x):
+    """Per-row int8 quantization of the driven operand (jitted: shared by
+    every lowering of every op that drives per-row)."""
+    q, s = quantize_symmetric(x, axis=-1)
+    return q, s.astype(jnp.float32)
+
+
+@jax.jit
+def _store_matmul_weights(w):
+    qw, sw = quantize_symmetric(w, axis=0)
+    return qw, qw.astype(jnp.float32), sw.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("adc_bits",))
+def _matmul_drive_fused(x, qw, sw, adc_bits):
+    """The whole per-drive chain as ONE jit — quantize the driven operand,
+    contract against the stored (pre-quantized) weights, ADC epilogue,
+    dequant. The driven quantization stays f32 (its values are exactly the
+    int8 codes), so the contraction runs straight on the BLAS path with no
+    int8 round-trip; bit-identical to ``psram_matmul_xla`` on the shared
+    store-quantized operands."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    sx = jnp.maximum(amax, 1e-12) / QMAX
+    qx = jnp.clip(jnp.round(x / sx), -QMAX, QMAX)
+    k = x.shape[-1]
+    if float(QMAX) * float(QMAX) * k < 2.0 ** 24:
+        acc = jnp.matmul(qx, qw.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+    else:
+        acc = jnp.matmul(qx.astype(jnp.int32), qw.astype(jnp.int32),
+                         preferred_element_type=jnp.int32)
+    analog = adc_transfer(acc, 2 ** adc_bits, float(QMAX) * float(QMAX) * k)
+    return analog * (sx * sw)
 
 
 def psram_matmul_op(
     x: jax.Array, w: jax.Array, adc_bits: int = 16, backend: str = "auto"
 ) -> jax.Array:
-    """Float-in/float-out pSRAM matmul: quantize, run the array kernel, dequant."""
-    qx, sx = quantize_symmetric(x, axis=-1)
-    qw, sw = quantize_symmetric(w, axis=0)
-    sx = sx.reshape(x.shape[0], 1)
-    sw = sw.reshape(1, w.shape[1])
+    """Float-in/float-out pSRAM matmul: store-quantize the weights (cached),
+    drive-quantize the input, run the array kernel, dequant. The ``"xla"``
+    lowering is the one-jit fused drive chain — bit-identical to the kernel
+    (exact int accumulation either way, same ADC epilogue)."""
+    qw, qwf, sw = _stored((w,), "matmul_w", _store_matmul_weights)
     low = resolve_lowering(backend)
-    if low == "ref":
-        return ref.psram_matmul_ref(qx, qw, sx, sw, adc_bits=adc_bits)
-    return psram_matmul(qx, qw, sx, sw, adc_bits=adc_bits,
-                        interpret=low == "interpret")
+    if low == "xla":
+        exact_f32 = float(QMAX) * float(QMAX) * x.shape[-1] < 2.0 ** 24
+        return _matmul_drive_fused(x, qwf if exact_f32 else qw, sw, adc_bits)
+    qx, sx = _quant_drive_rows(x)
+    fn = _dispatch("psram_matmul", {
+        "ref": lambda: ref.psram_matmul_ref(qx, qw, sx, sw, adc_bits=adc_bits),
+        "pallas": lambda: psram_matmul(qx, qw, sx, sw, adc_bits=adc_bits),
+        "interpret": lambda: psram_matmul(qx, qw, sx, sw, adc_bits=adc_bits,
+                                          interpret=True),
+    }, low)
+    return fn()
 
 
 def mttkrp_op(
     x: jax.Array, b: jax.Array, c: jax.Array, backend: str = "auto",
     bi: int = 128, bk: int = 128,
 ) -> jax.Array:
-    """Dense mode-0 MTTKRP; x is the 3-mode tensor (I, J, K)."""
+    """Dense mode-0 MTTKRP (exact arithmetic); x is the 3-mode tensor
+    (I, J, K)."""
     i, j, k = x.shape
     x0 = x.reshape(i, j * k)
     low = resolve_lowering(backend)
-    if low == "ref":
-        return ref.mttkrp_ref(x0, b, c)
-    return mttkrp_fused(x0, b, c, bi=bi, bk=bk, interpret=low == "interpret")
+    fn = _dispatch("mttkrp", {
+        "ref": lambda: ref.mttkrp_ref(x0, b, c),
+        "xla": lambda: ref.mttkrp_ref(x0, b, c),   # exact flat == fused jit
+        "pallas": lambda: mttkrp_fused(x0, b, c, bi=bi, bk=bk),
+        "interpret": lambda: mttkrp_fused(x0, b, c, bi=bi, bk=bk,
+                                          interpret=True),
+    }, low)
+    return fn()
+
+
+@jax.jit
+def _store_mttkrp_factors(b, c):
+    qb, sb = quantize_symmetric(b, axis=-1)
+    qc, sc = quantize_symmetric(c, axis=-1)
+    return qb, sb.astype(jnp.float32), qc, sc.astype(jnp.float32)
+
+
+def mttkrp_psram_op(
+    x: jax.Array, b: jax.Array, c: jax.Array, backend: str = "auto",
+    bi: int = 128, bk: int = 128, adc_bits: int = 16,
+) -> jax.Array:
+    """Dense mode-0 MTTKRP through the array numerics — the fused
+    matricized-KR variant: int8 operands, KR tiles from quantized factor
+    rows, ADC transfer epilogue per output tile. x is (I, J, K). The KR
+    factors are the stored operand (quantization cached on identity), the
+    unfolding is drive-quantized per call."""
+    i, j, k = x.shape
+    qb, sb, qc, sc = _stored((b, c), "mttkrp_bc", _store_mttkrp_factors)
+    qx, sx = _quant_drive_rows(x.reshape(i, j * k))
+    ops = (qx, sx, qb, sb, qc, sc)
+    low = resolve_lowering(backend)
+    fn = _dispatch("mttkrp_psram", {
+        "ref": lambda: ref.mttkrp_psram_ref(*ops, bi=bi, adc_bits=adc_bits),
+        "xla": lambda: mttkrp_psram_xla(*ops, bi=bi, adc_bits=adc_bits),
+        "pallas": lambda: mttkrp_psram_fused(*ops, bi=bi, bk=bk,
+                                             adc_bits=adc_bits),
+        "interpret": lambda: mttkrp_psram_fused(*ops, bi=bi, bk=bk,
+                                                adc_bits=adc_bits,
+                                                interpret=True),
+    }, low)
+    return fn()
+
+
+def fused_stream_mttkrp_op(
+    csf, factors, config=None, adc_bits: int = 16, backend: str = "auto",
+    exec_blocks: int | None = None, autotune: bool = False,
+) -> jax.Array:
+    """Sparse streaming MTTKRP through the fused kernel family (chain +
+    gather-mask contraction + ADC epilogue + cross-block carry in ONE
+    kernel); see kernels/stream_mttkrp.py. ``autotune=True`` sweeps and
+    caches the chunk size for this workload's tune key."""
+    from repro.backends.base import resolve_config
+    from repro.backends.lowering import resolve_exec_lowering
+    from .autotune import stream_params
+    from .stream_mttkrp import fused_stream_mttkrp
+
+    cfg = resolve_config(config)
+    low = resolve_exec_lowering(backend)
+    if exec_blocks is None:
+        exec_blocks = stream_params(
+            csf, tuple(factors), cfg, tune=autotune, adc_bits=adc_bits,
+            lowering=low if low != "pallas" else "xla",
+        )["exec_blocks"]
+    return fused_stream_mttkrp(
+        csf, tuple(factors), cfg, adc_bits=adc_bits, lowering=low,
+        exec_blocks=exec_blocks,
+    )
 
 
 def blocked_segment_sum_op(
@@ -59,10 +227,14 @@ def blocked_segment_sum_op(
     their block-local output-row segment; see kernels/segment_sum.py.
     """
     low = resolve_lowering(backend)
-    if low == "ref":
-        return ref.blocked_segment_sum_ref(data, seg_ids, n_seg)
-    return blocked_segment_sum(data, seg_ids, n_seg,
-                               interpret=low == "interpret")
+    fn = _dispatch("blocked_segment_sum", {
+        "ref": lambda: ref.blocked_segment_sum_ref(data, seg_ids, n_seg),
+        "xla": lambda: ref.blocked_segment_sum_ref(data, seg_ids, n_seg),
+        "pallas": lambda: blocked_segment_sum(data, seg_ids, n_seg),
+        "interpret": lambda: blocked_segment_sum(data, seg_ids, n_seg,
+                                                 interpret=True),
+    }, low)
+    return fn()
 
 
 def flash_attention_op(
@@ -70,9 +242,14 @@ def flash_attention_op(
     bq: int = 128, bkv: int = 128,
 ) -> jax.Array:
     low = resolve_lowering(backend)
-    if low == "ref":
-        return ref.attention_ref(q, k, v, causal=causal, softcap=softcap, scale=scale)
-    return flash_attention(
-        q, k, v, causal=causal, softcap=softcap, scale=scale,
-        bq=bq, bkv=bkv, interpret=low == "interpret",
-    )
+    fn = _dispatch("flash_attention", {
+        "ref": lambda: ref.attention_ref(q, k, v, causal=causal,
+                                         softcap=softcap, scale=scale),
+        "pallas": lambda: flash_attention(q, k, v, causal=causal,
+                                          softcap=softcap, scale=scale,
+                                          bq=bq, bkv=bkv),
+        "interpret": lambda: flash_attention(q, k, v, causal=causal,
+                                             softcap=softcap, scale=scale,
+                                             bq=bq, bkv=bkv, interpret=True),
+    }, low)
+    return fn()

@@ -45,6 +45,35 @@ def _kernel(qx_ref, qw_ref, sx_ref, sw_ref, out_ref, acc_ref, *, nk: int, adc_bi
         out_ref[...] = analog * (sx_ref[...] * sw_ref[...])
 
 
+@functools.partial(jax.jit, static_argnames=("adc_bits",))
+def psram_matmul_xla(
+    qx: jax.Array,   # (M, K) int8
+    qw: jax.Array,   # (K, N) int8
+    sx: jax.Array,   # (M, 1) f32
+    sw: jax.Array,   # (1, N) f32
+    adc_bits: int = 16,
+) -> jax.Array:
+    """The XLA lowering of the same kernel: one fused jit, bit-identical.
+
+    The int accumulation is exact whatever the tiling, so the int32
+    accumulator equals the Pallas kernel's VMEM scratch bit-for-bit; the
+    identical ADC epilogue then lands on identical codes. When the
+    worst-case accumulation ``QMAX^2 * K`` fits f32's integer range the
+    contraction runs on the f32 BLAS path (every partial sum an exact
+    integer — the ``schedule._execute_tiles`` trick), else int32.
+    """
+    k_total = qx.shape[-1]
+    if float(QMAX) * float(QMAX) * k_total < 2.0 ** 24:
+        acc = jnp.matmul(qx.astype(jnp.float32), qw.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+    else:
+        acc = jnp.matmul(qx.astype(jnp.int32), qw.astype(jnp.int32),
+                         preferred_element_type=jnp.int32)
+    full_scale = float(QMAX) * float(QMAX) * k_total
+    analog = adc_transfer(acc, 2 ** adc_bits, full_scale)
+    return analog * (sx * sw)
+
+
 @functools.partial(
     jax.jit, static_argnames=("bm", "bn", "bk", "adc_bits", "interpret")
 )

@@ -39,6 +39,32 @@ def mttkrp_ref(x0: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
     return x0 @ kr
 
 
+def mttkrp_psram_ref(
+    qx0: jax.Array,       # (I, J*K) int8 per-row-quantized unfolding
+    sx: jax.Array,        # (I, 1) f32
+    qb: jax.Array,        # (J, R) int8
+    sb: jax.Array,        # (J, 1) f32
+    qc: jax.Array,        # (K, R) int8
+    sc: jax.Array,        # (K, 1) f32
+    bi: int = 128,
+    adc_bits: int = 16,
+) -> jax.Array:
+    """Quantized matricized-KR MTTKRP + per-output-tile observed-range ADC —
+    the oracle of ``mttkrp_psram_fused`` / ``mttkrp_psram_xla``."""
+    i = qx0.shape[0]
+    j, r = qb.shape
+    k = qc.shape[0]
+    kr = (qb.astype(jnp.float32)[:, None] * qc.astype(jnp.float32)[None]
+          ) * (sb[:, None] * sc[None])
+    out = (qx0.astype(jnp.float32) * sx) @ kr.reshape(j * k, r)
+    bi = min(bi, i)
+    tiles = out.reshape(i // bi, bi, r)
+    full_scale = jnp.maximum(
+        jnp.max(jnp.abs(tiles), axis=(1, 2), keepdims=True), 1e-30)
+    from repro.core.quantization import adc_transfer
+    return adc_transfer(tiles, 2 ** adc_bits, full_scale).reshape(i, r)
+
+
 def blocked_segment_sum_ref(
     data: jax.Array,      # (B, bn, R) chain-row blocks
     seg_ids: jax.Array,   # (B, bn) block-local segment ids in [0, n_seg)

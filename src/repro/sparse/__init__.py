@@ -36,6 +36,7 @@ from .stream import (
     blocked_fold_reference,
     build_stream_program,
     rank_tile_widths,
+    stream_layout,
     stream_mttkrp,
     stream_mttkrp_blocked,
     stream_mttkrp_coo,
@@ -64,6 +65,7 @@ __all__ = [
     "powerlaw_coo",
     "powerlaw_fiber_lengths",
     "rank_tile_widths",
+    "stream_layout",
     "stream_mttkrp",
     "stream_mttkrp_blocked",
     "stream_mttkrp_coo",

@@ -241,6 +241,15 @@ def _compiled_layout(csf: CSF, rows: int, exec_blocks: int):
     return layout
 
 
+def stream_layout(csf: CSF, rows: int, exec_blocks: int):
+    """Public accessor of the compiled executor's padded block stacks —
+    ``(ip, vp, lp, sp, n_seg)`` — shared with the fused Pallas kernel
+    family (kernels/stream_mttkrp.py), so every lowering of the streaming
+    schedule drains ONE blocking (``_block_segments``) with one cached
+    preprocessing per CSF."""
+    return _compiled_layout(csf, rows, exec_blocks)
+
+
 def _mask_partials(d, l_b, n_seg):
     """All of a block stack's segment sums in one contraction: one-hot
     gather masks (the per-channel binary word-line drives of §IV) against

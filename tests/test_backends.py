@@ -399,3 +399,68 @@ def test_pallas_backend_wraps_kernels():
     got = backends.get("pallas").matmul(x, w)
     np.testing.assert_array_equal(
         np.asarray(got), np.asarray(psram_matmul_op(x, w)))
+
+
+def test_exec_lowering_registry_owned():
+    """Execution resolves separately from validation: ``"auto"`` must land
+    on a *fast* lowering (real pallas on TPU, the fused XLA twin elsewhere),
+    never interpret mode; both resolvers reject unknown strings."""
+    assert backends.resolve_exec_lowering("auto") in ("pallas", "xla")
+    assert backends.resolve_exec_lowering("ref") == "ref"
+    for low in backends.RESOLVED_LOWERINGS:
+        assert backends.resolve_exec_lowering(low) == low
+    with pytest.raises(ValueError, match="unknown kernel lowering"):
+        backends.resolve_exec_lowering("cuda")
+
+
+def test_pallas_capabilities_compiled_autotune_wiring():
+    caps = backends.get("pallas").capabilities()
+    assert caps.compiled and not caps.autotune      # fused family by default
+    legacy = backends.get("pallas", compiled=False).capabilities()
+    assert not legacy.compiled
+    assert "legacy" in legacy.description
+    tuned = backends.get("pallas", autotune=True).capabilities()
+    assert tuned.compiled and tuned.autotune
+
+
+def test_pallas_lowering_resolved_at_construction():
+    """The lowering string resolves ONCE, at backend construction — an
+    invalid string fails there, not at the first kernel call, and the
+    resolved value is a concrete lowering (never "auto")."""
+    be = backends.get("pallas")
+    assert be.lowering in backends.RESOLVED_LOWERINGS
+    with pytest.raises(ValueError, match="unknown kernel lowering"):
+        backends.get("pallas", lowering="cuda")
+    # the legacy per-op path resolves through the validation contract
+    legacy = backends.get("pallas", compiled=False)
+    assert legacy.lowering in backends.RESOLVED_LOWERINGS
+
+
+def test_kernel_op_missing_dispatch_entry_is_clear():
+    """An op asked for a resolved lowering it doesn't implement reports
+    exactly what exists instead of a bare KeyError (satellite: flash
+    attention has no fused-XLA twin — interpret/pallas/ref only)."""
+    from repro.kernels.ops import flash_attention_op
+
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 64, 16))
+    with pytest.raises(RuntimeError, match="no dispatch entry.*implemented"):
+        flash_attention_op(q, q, q, backend="xla")
+
+
+def test_pallas_autotuned_sparse_parity(sparse_fixture):
+    """autotune=True tunes in-process and stays inside the envelope; the
+    winner lands in the autotune cache."""
+    from repro.kernels.autotune import cache_stats, clear_autotune_cache
+
+    coo, fs = sparse_fixture
+    csf = csf_for_mode(coo, 0)
+    want = backends.get("exact").mttkrp(csf, fs, 0)
+    clear_autotune_cache()
+    try:
+        be = backends.get("pallas", autotune=True)
+        got = be.mttkrp(csf, fs, 0)
+        rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+        assert rel < _tol("pallas")
+        assert cache_stats()[0] == 1
+    finally:
+        clear_autotune_cache()

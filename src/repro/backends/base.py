@@ -154,6 +154,14 @@ class Backend:
         MatmulWorkload) on this substrate."""
         raise CapabilityError(f"backend {self.name!r} has no cost model")
 
+    def gram(self, f):
+        """The ``(R, R)`` Gram ``f.T @ f`` of one factor — the CP-ALS
+        normal-equation building block. Single-substrate backends compute
+        it locally; distributed backends (``"psram-mesh"``) override it
+        with an all-reduce of per-shard partial Grams so the whole ALS
+        sweep executes SPMD."""
+        return f.T @ f
+
     # -- shared helpers ----------------------------------------------------
     def _require(self, what: str, ok: bool) -> None:
         if not ok:

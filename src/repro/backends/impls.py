@@ -14,6 +14,9 @@ name               wraps
                    cost model
 ``pallas``         the Pallas TPU kernels (interpret mode on CPU): bit-plane
                    matmul, fused dense MTTKRP, blocked segment-sum stream
+``psram-mesh``     many arrays: the streaming schedule SPMD over a 1-D
+                   device mesh (repro.sparse.mesh) — planned shards under
+                   shard_map, psum as the electrical reduction fabric
 ``analytical``     the closed-form §V model — cost-only, never executes
 =================  =========================================================
 
@@ -321,6 +324,112 @@ class PallasBackend(Backend):
             csf, tuple(factors), self.config, backend=self.lowering)
 
 
+@register("psram-mesh")
+class PsramMeshBackend(Backend):
+    """The streaming sparse schedule scaled past one array: shards from the
+    partition planner land on the ``"array"`` axis of a 1-D device mesh,
+    every device drains its shard under ``shard_map``, and a ``psum`` —
+    the electrical reduction fabric — adds the partial factor outputs
+    (``repro.sparse.mesh``). Dense data is accepted by COO-ifying.
+
+    ``n_arrays=None`` spans every local device (1 in plain CPU runs — the
+    mesh then degenerates to exactly the single-device schedule; force more
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``). The
+    planner never splits a root fiber, so the default eager lowering is
+    *bit-identical* to ``"psram-stream"`` and independent of device count
+    and shard order; ``compiled=True`` runs the blocked-segment fold per
+    shard (reassociated, ``bit_exact`` drops); ``lowering="fused"`` runs
+    the PR 6 int8 fused chunk body. ``cost()`` prices the planned split —
+    per-array counted makespan plus the fabric all-reduce — with the same
+    closed forms ``"analytical"`` uses, so estimate==measured stays exact
+    at mesh scale.
+    """
+
+    def __init__(self, config=None, n_arrays: int | None = None,
+                 compiled: bool = False, lowering: str | None = None,
+                 planner: str = "makespan", fabric=None):
+        super().__init__(config)
+        from repro.sparse.mesh import MESH_LOWERINGS
+
+        self.n_arrays = None if n_arrays is None else int(n_arrays)
+        self.compiled = bool(compiled)
+        self.lowering = lowering or ("compiled" if compiled else "eager")
+        if self.lowering not in MESH_LOWERINGS:
+            raise ValueError(
+                f"unknown mesh lowering {self.lowering!r}; pick one of "
+                f"{MESH_LOWERINGS}")
+        self.compiled = self.lowering != "eager"
+        self.planner = planner
+        self.fabric = fabric
+
+    def capabilities(self) -> Capabilities:
+        return Capabilities(
+            executes=True, cost_model=True, matmul=False, lossy=True,
+            rel_tol=0.05, prices=("sparse",), prefers_csf=True,
+            bit_exact=not self.compiled, compiled=self.compiled,
+            description="mesh-sharded streaming schedule (shard_map + psum "
+                        f"fabric, {self.lowering} fold)",
+        )
+
+    def mttkrp(self, data, factors, mode: int):
+        from repro.sparse.mesh import mesh_stream_mttkrp
+
+        csf = mode_csf(normalize_mttkrp_data(data), mode)
+        return mesh_stream_mttkrp(
+            csf, tuple(factors), self.config, n_arrays=self.n_arrays,
+            psram=True, adc_bits=self.config.adc.bits,
+            lowering=self.lowering, planner=self.planner,
+        )
+
+    def gram(self, f):
+        """All-reduced Gram — partial ``(R, R)`` Grams of the row shards
+        psum'd over the array axis (CP-ALS normal equations, SPMD)."""
+        from repro.sparse.mesh import mesh_gram
+
+        return mesh_gram(f, n_arrays=self.n_arrays)
+
+    def cost(self, workload) -> Estimate:
+        from repro.core.perf_model import (
+            MeshSparseMTTKRPWorkload,
+            SparseMTTKRPWorkload,
+            breakdown_from_counts,
+        )
+        from repro.core.schedule import program_energy
+        from repro.sparse.mesh import mesh_counted_price
+
+        workload = describe(workload)
+        if not isinstance(workload, SparseMTTKRPWorkload):
+            raise CapabilityError(
+                "backend 'psram-mesh' prices fiber-length distributions "
+                "(SparseMTTKRPWorkload / MeshSparseMTTKRPWorkload); use "
+                "'psram-scheduled' or 'analytical' for dense descriptors"
+            )
+        if isinstance(workload, MeshSparseMTTKRPWorkload):
+            n = workload.n_arrays
+            fabric = workload.fabric or self.fabric
+            out_rows = workload.reduced_rows
+        else:
+            n = self.n_arrays or 1
+            fabric = self.fabric
+            out_rows = None
+        price, ps = mesh_counted_price(
+            workload.fiber_lengths, workload.rank, self.config,
+            n_arrays=n, fabric=fabric, planner=self.planner,
+            out_rows=out_rows)
+        counts = price.counts
+        energy = sum((program_energy(p) for p in ps.programs[1:]),
+                     program_energy(ps.programs[0]))
+        return Estimate(
+            backend=self.name,
+            config=self.config,
+            workload=workload,
+            breakdown=breakdown_from_counts(self.config, counts),
+            time_s=price.duration_s(self.config),
+            counts=counts,
+            energy=energy,
+        )
+
+
 @register("analytical")
 class AnalyticalBackend(Backend):
     """The closed-form §V predictive model — cost-only. Asking it to execute
@@ -337,7 +446,10 @@ class AnalyticalBackend(Backend):
 
     def cost(self, workload) -> Estimate:
         from repro.core.perf_model import (
+            MeshSparseMTTKRPWorkload,
             MTTKRPWorkload,
+            breakdown_from_counts,
+            mesh_sparse_price,
             mttkrp_energy,
             sustained_mttkrp,
         )
@@ -348,6 +460,21 @@ class AnalyticalBackend(Backend):
             return _program_estimate(
                 self.name, self.config, _matmul_program(self.config, workload),
                 workload)
+        if isinstance(workload, MeshSparseMTTKRPWorkload):
+            # the mesh closed form: per-array makespan (the same stream
+            # counts the counted schedule walks) + the fabric all-reduce —
+            # matches "psram-mesh"'s counted price exactly
+            price = mesh_sparse_price(self.config, workload)
+            counts = price.counts
+            return Estimate(
+                backend=self.name,
+                config=self.config,
+                workload=workload,
+                breakdown=breakdown_from_counts(self.config, counts),
+                time_s=price.duration_s(self.config),
+                counts=counts,
+                energy=None,
+            )
         sb = sustained_mttkrp(self.config, workload)
         rate = sb.sustained_petaops * 1e15
         return Estimate(

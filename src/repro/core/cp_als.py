@@ -273,8 +273,12 @@ def cp_als(
     last = len(shape) - 1
     # per-sweep Gram reuse: each (R, R) Gram changes only when its factor
     # does, so keep them current incrementally — N Gram matmuls per sweep
-    # instead of N·(N-1) + N (the bits are unchanged: same op, same operand)
-    grams = [f.T @ f for f in factors]
+    # instead of N·(N-1) + N (the bits are unchanged: same op, same operand).
+    # The Gram itself comes from the backend: local ``f.T @ f`` everywhere
+    # except distributed backends ("psram-mesh"), whose override all-reduces
+    # per-shard partial Grams — the sweep then executes SPMD end to end.
+    gram = be.gram if be is not None else (lambda f: f.T @ f)
+    grams = [gram(f) for f in factors]
     for it in range(1, n_iter + 1):
         for mode in range(len(shape)):
             m = fn(x, factors, mode)                      # MTTKRP
@@ -282,7 +286,7 @@ def cp_als(
             a = m @ jnp.linalg.pinv(g)
             lam = jnp.maximum(jnp.linalg.norm(a, axis=0), 1e-12)
             factors[mode] = a / lam
-            grams[mode] = factors[mode].T @ factors[mode]
+            grams[mode] = gram(factors[mode])
         # fit = 1 - ||X - X_hat|| / ||X||, via the standard inner-product trick
         g_all = _hadamard_of(grams, skip=-1) * jnp.outer(lam, lam)
         # <X, X_hat> needs the final-mode MTTKRP against the *current* other

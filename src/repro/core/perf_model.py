@@ -16,6 +16,7 @@ reconfiguring the array between tiles.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 from .psram import PsramConfig
 
@@ -72,6 +73,64 @@ class SparseMTTKRPWorkload:
         # same convention as MTTKRPWorkload: CP1+CP2 muls, CP3 folded into
         # the 2 ops/MAC
         return 2 * self.rank * self.nonzeros
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSparseMTTKRPWorkload(SparseMTTKRPWorkload):
+    """A sparse MTTKRP spanning ``n_arrays`` pSRAM arrays joined by an
+    electrical reduction fabric.
+
+    Subclasses :class:`SparseMTTKRPWorkload`, so single-array consumers see
+    the whole-tensor view unchanged; mesh-aware backends (``"psram-mesh"``,
+    ``"analytical"``) price the split: per-array makespan (arrays run
+    concurrently) plus the fabric's all-reduce of the ``(out_rows, rank)``
+    partial outputs. ``out_rows`` defaults to the nonempty-row count
+    (``n_fibers``) — override it with the full output-mode dimension to bill
+    the fabric for reducing the dense output block.
+    """
+
+    n_arrays: int = 1
+    out_rows: int | None = None
+    fabric: "MeshFabric | None" = None
+
+    @property
+    def reduced_rows(self) -> int:
+        return self.n_fibers if self.out_rows is None else int(self.out_rows)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshFabric:
+    """The electrical reduction fabric joining pSRAM arrays.
+
+    The system-level follow-on (arxiv 2602.00892) keeps the reduction
+    electrical: per all-reduce step each array moves+adds ``reduce_words``
+    f32 words per fabric cycle, and the fabric runs at the array clock. A
+    butterfly over ``A`` arrays needs ``ceil(log2 A)`` steps.
+    """
+
+    reduce_words: int = 256
+
+    def allreduce_cycles(self, out_rows: int, rank: int,
+                         n_arrays: int) -> int:
+        """Fabric cycles to all-reduce an ``(out_rows, rank)`` f32 partial
+        output across ``n_arrays`` arrays — 0 on a single array, and 0 for
+        an empty output (nothing to move)."""
+        if n_arrays <= 1 or out_rows <= 0 or rank <= 0:
+            return 0
+        steps = math.ceil(math.log2(n_arrays))
+        return steps * -(-(out_rows * rank) // self.reduce_words)
+
+
+DEFAULT_FABRIC = MeshFabric()
+
+
+def allreduce_cycles(out_rows: int, rank: int, n_arrays: int,
+                     fabric: MeshFabric | None = None) -> int:
+    """Module-level front door of :meth:`MeshFabric.allreduce_cycles` — the
+    ONE closed form both the analytical mesh price and the counted mesh
+    schedule use, so estimate==measured can hold exactly at mesh scale."""
+    return (fabric or DEFAULT_FABRIC).allreduce_cycles(out_rows, rank,
+                                                       n_arrays)
 
 
 def peak_ops(cfg: PsramConfig) -> float:
@@ -165,17 +224,28 @@ def sustained_sparse_mttkrp(
     ``measured_utilization(build_stream_program(...))`` must agree within 5%
     on the §V-A configuration (tests/test_sparse.py).
     """
+    cfg.validate()
+    return breakdown_from_counts(
+        cfg, stream_counts(cfg, wl.fiber_lengths, wl.rank))
+
+
+def stream_counts(cfg: PsramConfig, fiber_lengths, rank: int):
+    """Closed-form :class:`~repro.core.schedule.CycleCounts` of the streaming
+    schedule for one array — equal, field for field, to
+    ``count_cycles(build_stream_program(fiber_lengths, rank, cfg))`` without
+    building the op list (asserted in tests/test_sparse.py). An empty
+    distribution counts zero everything: empty shards of a multi-array
+    split are priced at zero cycles."""
     from .schedule import CycleCounts, stream_block_layout
 
-    cfg.validate()
-    nnz_b, seg_b = stream_block_layout(wl.fiber_lengths, cfg.rows)
+    nnz_b, seg_b = stream_block_layout(fiber_lengths, cfg.rows)
     nnz = int(nnz_b.sum())
-    rank = int(wl.rank)
+    rank = int(rank)
     tiles = -(-rank // cfg.word_cols)
     if nnz == 0:
-        return breakdown_from_counts(cfg, CycleCounts(0, 0, 0, 0, 0, 0))
+        return CycleCounts(0, 0, 0, 0, 0, 0)
     drain_b = -(-seg_b // cfg.wavelengths)
-    counts = CycleCounts(
+    return CycleCounts(
         write_cycles=tiles * nnz,
         compute_cycles=tiles * int(drain_b.sum()),
         macs=nnz * rank,
@@ -183,7 +253,77 @@ def sustained_sparse_mttkrp(
         live_word_cycles=rank * int((drain_b * nnz_b).sum()),
         stores=tiles * len(nnz_b),
     )
-    return breakdown_from_counts(cfg, counts)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPrice:
+    """Price of one sparse MTTKRP across a mesh of arrays.
+
+    ``per_array`` holds every array's counted cycles (empty shards count
+    zero); arrays run concurrently, so the execution term is the makespan
+    (slowest array), and the fabric's all-reduce of the partial outputs is
+    serialized after it. ``counts`` sums the per-array work — the energy /
+    utilization view, *not* the latency view.
+    """
+
+    per_array: tuple
+    reduce_cycles: int
+    n_arrays: int
+
+    @property
+    def makespan_cycles(self) -> int:
+        return max(c.total_cycles for c in self.per_array)
+
+    @property
+    def total_cycles(self) -> int:
+        return self.makespan_cycles + self.reduce_cycles
+
+    @property
+    def counts(self):
+        per = list(self.per_array)
+        return sum(per[1:], per[0])
+
+    def duration_s(self, cfg: PsramConfig) -> float:
+        return self.total_cycles / (cfg.frequency_ghz * 1e9)
+
+
+def mesh_sparse_price(
+    cfg: PsramConfig,
+    wl: "SparseMTTKRPWorkload | MeshSparseMTTKRPWorkload",
+    n_arrays: int | None = None,
+    fabric: MeshFabric | None = None,
+    planner: str = "makespan",
+) -> MeshPrice:
+    """Analytical price of a sparse MTTKRP split over ``n_arrays`` pSRAM
+    arrays: per-array closed-form stream counts on the planner's own
+    partition boundaries, plus the electrical all-reduce of the partial
+    outputs. Uses the SAME partition planner and the SAME closed forms as
+    the executing ``"psram-mesh"`` backend's counted schedule, so
+    analytical == counted holds exactly at mesh scale (tests/test_mesh.py).
+    """
+    import numpy as np
+
+    from repro.sparse.partition import plan_partitions
+
+    cfg.validate()
+    if isinstance(wl, MeshSparseMTTKRPWorkload):
+        n_arrays = wl.n_arrays if n_arrays is None else n_arrays
+        fabric = wl.fabric if fabric is None else fabric
+        out_rows = wl.reduced_rows
+    else:
+        out_rows = wl.n_fibers
+    n_arrays = 1 if n_arrays is None else int(n_arrays)
+    f = np.asarray(wl.fiber_lengths, dtype=np.int64)
+    parts = plan_partitions(f, n_arrays, wl.rank, cfg, planner=planner)
+    per = tuple(
+        stream_counts(cfg, f[p.fiber_start:p.fiber_stop], wl.rank)
+        for p in parts
+    )
+    return MeshPrice(
+        per_array=per,
+        reduce_cycles=allreduce_cycles(out_rows, wl.rank, n_arrays, fabric),
+        n_arrays=n_arrays,
+    )
 
 
 def breakdown_from_counts(cfg: PsramConfig, counts) -> SustainedBreakdown:

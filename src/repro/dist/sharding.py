@@ -32,7 +32,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 # (the dimension shards over their size product). Candidates are tried in
 # order; absent mesh axes are dropped from a candidate before trying it.
 _MODEL = (("model",),)
-_DATA = (("pod", "data"), ("data",))
+# "array" is the 1-D pSRAM-array mesh axis (launch.mesh.make_array_mesh);
+# batch-like dimensions claim it exactly like the data axes, so
+# sparse.arrays_for_mesh answers from the same rule set. Meshes without an
+# "array" axis drop the candidate before it is tried — nothing changes for
+# the 2-D/3-D production meshes.
+_DATA = (("pod", "data"), ("data",), ("array",))
 
 # Tensor-parallel and batch-parallel logical names (primary claimers).
 PRIMARY_CLAIMS = {

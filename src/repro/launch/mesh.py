@@ -28,5 +28,30 @@ def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
     )
 
 
+def make_array_mesh(n_arrays: int | None = None) -> jax.sharding.Mesh:
+    """1-D mesh over the pSRAM arrays (axis ``"array"``).
+
+    One device hosts one array's shard of the nonzero stream
+    (``repro.sparse.mesh``); the ``"array"`` axis is a data axis under the
+    dist.sharding rules, so ``sparse.arrays_for_mesh`` sees it like any
+    batch claim. ``n_arrays`` defaults to every local device; validate on
+    CPU with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` set
+    before the first jax import.
+    """
+    import numpy as np
+
+    devs = jax.devices()
+    n = len(devs) if n_arrays is None else int(n_arrays)
+    if n < 1:
+        raise ValueError("need at least one array")
+    if n > len(devs):
+        raise ValueError(
+            f"asked for {n} arrays but only {len(devs)} devices exist; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=N before "
+            "importing jax to emulate more on CPU"
+        )
+    return jax.sharding.Mesh(np.asarray(devs[:n]), ("array",))
+
+
 def chips(mesh: jax.sharding.Mesh) -> int:
     return mesh.devices.size

@@ -77,7 +77,8 @@ def _decode_projection_shapes(cfg, batch: int) -> list[tuple[int, int, int]]:
 
 
 def offload_report(workload, backend=None, config=None, *, batch: int = 1,
-                   fidelity: bool = True, rank: int = 32, n_arrays: int = 1):
+                   fidelity: bool = True, rank: int = 32, n_arrays: int = 1,
+                   fabric=None):
     """Cost of offloading ``workload`` onto the pSRAM engine, via the
     backend registry (built on ``repro.api.estimate``).
 
@@ -91,8 +92,12 @@ def offload_report(workload, backend=None, config=None, *, batch: int = 1,
       of its transfer function (skipped when the backend can't execute).
     * a ``SparseMTTKRPWorkload`` or a raw fiber-length array — the
       nonzero-streaming schedule, cross-checked against the analytical
-      model (``model`` key); ``n_arrays > 1`` prices an nnz-balanced
-      multi-array split (makespan = slowest array).
+      model (``model`` key); ``n_arrays > 1`` prices a makespan-planned
+      multi-array split: execution = slowest array, then ``fabric`` (a
+      ``perf_model.MeshFabric``, default electrical ring) all-reduces the
+      partial outputs — the report gains ``makespan_cycles`` /
+      ``reduce_cycles`` / ``n_arrays`` keys. A ``MeshSparseMTTKRPWorkload``
+      carries its own topology, which wins over the keyword arguments.
     * a dense ``MTTKRPWorkload`` — the §V dense mapping.
 
     ``backend`` is a registry name (default: ``"psram-scheduled"`` for
@@ -111,7 +116,7 @@ def offload_report(workload, backend=None, config=None, *, batch: int = 1,
     if isinstance(workload, ArchConfig):
         return _projection_report(workload, backend, config, batch, fidelity)
     if isinstance(workload, SparseMTTKRPWorkload):
-        return _sparse_report(workload, backend, config, n_arrays)
+        return _sparse_report(workload, backend, config, n_arrays, fabric)
     # duck-type fiber-length sequences: any 1-D array-like (numpy, jnp,
     # list, tuple) is a sparse distribution
     if not isinstance(workload, MTTKRPWorkload):
@@ -123,7 +128,7 @@ def offload_report(workload, backend=None, config=None, *, batch: int = 1,
                 and np.issubdtype(fibers.dtype, np.number):
             return _sparse_report(
                 SparseMTTKRPWorkload(fiber_lengths=fibers, rank=rank),
-                backend, config, n_arrays)
+                backend, config, n_arrays, fabric)
     if isinstance(workload, MTTKRPWorkload):
         from repro import api
 
@@ -178,11 +183,23 @@ def _projection_report(cfg, backend, config, batch, fidelity):
     }
 
 
-def _sparse_report(workload, backend, config, n_arrays):
-    """Streaming sparse MTTKRP priced per array partition, model-checked."""
+def _sparse_report(workload, backend, config, n_arrays, fabric=None, *,
+                   legacy: bool = False):
+    """Streaming sparse MTTKRP priced per array partition, model-checked.
+
+    The default path prices through the mesh makespan model
+    (:func:`repro.sparse.mesh.mesh_counted_price`): the makespan-planner
+    split, per-array counted cycles, and the electrical fabric's all-reduce
+    of the partial outputs serialized after the slowest array. ``legacy=True``
+    keeps the pre-mesh numbers (nnz-balanced split, no reduction cost) for
+    the deprecated ``sparse_offload_report`` adapter, whose callers pinned
+    those cycles in their own baselines.
+    """
     from repro import api, backends
-    from repro.core.perf_model import breakdown_from_counts
+    from repro.core.perf_model import (MeshSparseMTTKRPWorkload,
+                                       breakdown_from_counts)
     from repro.core.schedule import program_energy
+    from repro.sparse.mesh import mesh_counted_price
     from repro.sparse.partition import partition_fiber_lengths
 
     be = backends.get(backend or "psram-stream", config)
@@ -195,19 +212,41 @@ def _sparse_report(workload, backend, config, n_arrays):
             f"backend {be.name!r} cannot price a sparse MTTKRP workload; "
             "use 'psram-stream' or 'analytical'"
         )
-    ps = partition_fiber_lengths(
-        workload.fiber_lengths, n_arrays, workload.rank, arr)
+    out_rows = None
+    if isinstance(workload, MeshSparseMTTKRPWorkload):
+        # a mesh workload carries its own topology — its fields win
+        n_arrays = workload.n_arrays
+        fabric = workload.fabric if workload.fabric is not None else fabric
+        out_rows = workload.out_rows
+    extra: dict = {}
+    if legacy:
+        ps = partition_fiber_lengths(
+            workload.fiber_lengths, n_arrays, workload.rank, arr)
+        counts = ps.counts
+        time_s = ps.critical_path_cycles / (arr.frequency_ghz * 1e9)
+    else:
+        price, ps = mesh_counted_price(
+            workload.fiber_lengths, workload.rank, arr, n_arrays=n_arrays,
+            fabric=fabric, out_rows=out_rows)
+        counts = price.counts
+        time_s = price.duration_s(arr)
+        extra = {
+            "makespan_cycles": price.makespan_cycles,
+            "reduce_cycles": price.reduce_cycles,
+            "n_arrays": price.n_arrays,
+        }
     energy = sum((program_energy(p) for p in ps.programs[1:]),
                  program_energy(ps.programs[0]))
     return {
         "backend": be.name,
-        "cycles": ps.counts,
-        "time_s": ps.critical_path_cycles / (arr.frequency_ghz * 1e9),
-        "utilization": breakdown_from_counts(arr, ps.counts),
+        "cycles": counts,
+        "time_s": time_s,
+        "utilization": breakdown_from_counts(arr, counts),
         "energy": energy,
         "model": api.estimate(workload, backend="analytical",
                               config=arr).breakdown,
         "imbalance": ps.imbalance,
+        **extra,
     }
 
 
@@ -232,8 +271,13 @@ def sparse_offload_report(fiber_lengths, rank: int = 32, psram_config=None,
         "serve.offload_report(fiber_lengths, backend=..., n_arrays=...)",
         DeprecationWarning, stacklevel=2,
     )
-    return offload_report(fiber_lengths, config=psram_config, rank=rank,
-                          n_arrays=n_arrays)
+    from repro.core.perf_model import SparseMTTKRPWorkload
+
+    # the pre-mesh numbers: nnz-balanced split, no reduction cost — kept
+    # frozen so baselines pinned against this adapter keep reproducing
+    return _sparse_report(
+        SparseMTTKRPWorkload(fiber_lengths=fiber_lengths, rank=rank),
+        None, psram_config, n_arrays, legacy=True)
 
 
 def make_serve_step(cfg):

@@ -13,23 +13,39 @@ subsystem:
   WDM channel, post-ADC electrical accumulation; lowered through the
   ``core.schedule`` IR (``StoreTile``/``GatherDrive``) and executed
   bit-identically to ``mttkrp_sparse`` without any scatter matrix.
-* ``partition`` — nnz-balanced multi-array partitioning whose array count
-  comes from the ``repro.dist.sharding`` rule set.
+* ``partition`` — multi-array partitioning (nnz-balanced or makespan-
+  refined planners) whose array count comes from the ``repro.dist.sharding``
+  rule set; empty partitions are first-class and price zero cycles.
+* ``mesh``      — SPMD execution of the stream across a device mesh:
+  per-shard fused streaming MTTKRP under ``shard_map`` with a ``psum`` of
+  partial outputs, all-reduced Grams for CP-ALS, and the counted mesh
+  price (per-array makespan + fabric all-reduce) the ``"psram-mesh"``
+  backend and ``serve.offload_report`` bill against.
 
 The worked mapping (which operand is stored vs driven, where CP3
 accumulates) is documented in ``stream``'s module docstring and walked in
 ``examples/sparse_decompose.py``.
 """
 from .formats import COO, CSF, BlockedCOO, SortedCOO, csf_for_mode
+from .mesh import (
+    MESH_LOWERINGS,
+    mesh_counted_price,
+    mesh_gram,
+    mesh_stream_mttkrp,
+    resolve_array_mesh,
+)
 from .partition import (
+    PLANNERS,
     MeshedSparseTensor,
     Partition,
     PartitionedSchedule,
     arrays_for_mesh,
     imbalance,
+    makespan_partitions,
     nnz_balanced_partitions,
     partition_csf,
     partition_fiber_lengths,
+    plan_partitions,
 )
 from .stream import (
     StreamedMTTKRP,
@@ -48,6 +64,8 @@ __all__ = [
     "COO",
     "CSF",
     "BlockedCOO",
+    "MESH_LOWERINGS",
+    "PLANNERS",
     "SortedCOO",
     "FiberStats",
     "MeshedSparseTensor",
@@ -59,12 +77,18 @@ __all__ = [
     "build_stream_program",
     "csf_for_mode",
     "imbalance",
+    "makespan_partitions",
+    "mesh_counted_price",
+    "mesh_gram",
+    "mesh_stream_mttkrp",
     "nnz_balanced_partitions",
     "partition_csf",
     "partition_fiber_lengths",
+    "plan_partitions",
     "powerlaw_coo",
     "powerlaw_fiber_lengths",
     "rank_tile_widths",
+    "resolve_array_mesh",
     "stream_layout",
     "stream_mttkrp",
     "stream_mttkrp_blocked",

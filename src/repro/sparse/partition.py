@@ -47,6 +47,14 @@ def nnz_balanced_partitions(fiber_lengths: np.ndarray,
     Boundaries are the fibers whose cumulative nonzero count crosses the
     equal-share targets; a fiber is never split across arrays (its segment
     carry must stay on one array's electrical accumulator).
+
+    Degrades gracefully when there are fewer fibers (or nonzeros) than
+    arrays: the surplus arrays receive *empty* ranges (``fiber_start ==
+    fiber_stop``, ``nnz == 0``). Empty partitions are a first-class output
+    — ``build_stream_program`` emits no ops for them, so they are priced
+    at zero cycles everywhere (``stream_counts``, ``PartitionedSchedule``,
+    the mesh price), and the mesh executor streams them as all-padding
+    blocks that scatter into the sacrificial row.
     """
     f = np.asarray(fiber_lengths, dtype=np.int64)
     if n_arrays < 1:
@@ -72,6 +80,89 @@ def nnz_balanced_partitions(fiber_lengths: np.ndarray,
             nnz=int(f[lo:hi].sum()),
         ))
     return out
+
+
+def makespan_partitions(
+    fiber_lengths: np.ndarray,
+    n_arrays: int,
+    rank: int,
+    config: PsramConfig | None = None,
+    max_passes: int = 8,
+) -> list[Partition]:
+    """Route fibers across arrays by *predicted makespan* instead of raw nnz.
+
+    Starts from the nnz-balanced cut and greedily shifts partition
+    boundaries fiber by fiber while the predicted per-array cycle count
+    (``perf_model.stream_counts`` — the closed form that equals the counted
+    schedule exactly) of the heavier neighbor drops. nnz balance is a proxy:
+    two arrays with equal nonzeros can differ in drain cycles by the segment
+    structure of their fibers (many singleton fibers cost
+    ``ceil(segments/wavelengths)`` extra optical cycles per block), and the
+    makespan is set by the slowest array alone.
+    """
+    from repro.core.perf_model import stream_counts
+
+    cfg = resolve_config(config)
+    f = np.asarray(fiber_lengths, dtype=np.int64)
+    parts = nnz_balanced_partitions(f, n_arrays)
+    bounds = [p.fiber_start for p in parts] + [len(f)]
+
+    def cycles(a: int) -> int:
+        return stream_counts(
+            cfg, f[bounds[a]:bounds[a + 1]], rank).total_cycles
+
+    cyc = [cycles(a) for a in range(n_arrays)]
+    for _ in range(max_passes):
+        moved = False
+        for a in range(1, n_arrays):
+            # boundary between arrays a-1 and a: shift it toward the
+            # lighter side while the pair's max predicted cycles drops
+            while True:
+                left, right = cyc[a - 1], cyc[a]
+                if left > right and bounds[a] - bounds[a - 1] > 1:
+                    trial = bounds[a] - 1
+                elif right > left and bounds[a + 1] - bounds[a] > 1:
+                    trial = bounds[a] + 1
+                else:
+                    break
+                old = bounds[a]
+                bounds[a] = trial
+                nl, nr = cycles(a - 1), cycles(a)
+                if max(nl, nr) < max(left, right):
+                    cyc[a - 1], cyc[a] = nl, nr
+                    moved = True
+                else:
+                    bounds[a] = old
+                    break
+        if not moved:
+            break
+    return [
+        Partition(array_id=a, fiber_start=int(bounds[a]),
+                  fiber_stop=int(bounds[a + 1]),
+                  nnz=int(f[bounds[a]:bounds[a + 1]].sum()))
+        for a in range(n_arrays)
+    ]
+
+
+PLANNERS = ("nnz", "makespan")
+
+
+def plan_partitions(
+    fiber_lengths: np.ndarray,
+    n_arrays: int,
+    rank: int,
+    config: PsramConfig | None = None,
+    planner: str = "makespan",
+) -> list[Partition]:
+    """The one partition-planning front door: ``"nnz"`` is the balanced-cut
+    baseline, ``"makespan"`` (default) refines it by predicted per-array
+    cycles. Both the executing mesh path and the analytical mesh price call
+    THIS function, so they always agree on the boundaries."""
+    if planner not in PLANNERS:
+        raise ValueError(f"unknown planner {planner!r}; pick one of {PLANNERS}")
+    if planner == "nnz":
+        return nnz_balanced_partitions(fiber_lengths, n_arrays)
+    return makespan_partitions(fiber_lengths, n_arrays, rank, config)
 
 
 def imbalance(parts: list[Partition]) -> float:
@@ -136,12 +227,15 @@ def partition_fiber_lengths(
     n_arrays: int,
     rank: int,
     config: PsramConfig | None = None,
+    planner: str = "nnz",
 ) -> PartitionedSchedule:
-    """nnz-balanced split + per-array stream programs from the fiber-length
-    distribution alone (no coordinates needed — paper-scale pricing)."""
+    """Planned split + per-array stream programs from the fiber-length
+    distribution alone (no coordinates needed — paper-scale pricing).
+    ``planner`` picks the boundary rule (see :func:`plan_partitions`);
+    the historical default stays the nnz-balanced cut."""
     cfg = resolve_config(config)
     f = np.asarray(fiber_lengths, dtype=np.int64)
-    parts = nnz_balanced_partitions(f, n_arrays)
+    parts = plan_partitions(f, n_arrays, rank, cfg, planner=planner)
     programs = tuple(
         build_stream_program(f[p.fiber_start:p.fiber_stop], rank, cfg)
         for p in parts
@@ -157,13 +251,15 @@ def partition_csf(
     config: PsramConfig | None = None,
     logical_axis: str = "batch",
     rules=None,
+    planner: str = "nnz",
 ) -> MeshedSparseTensor:
     """Span ``csf`` over a mesh of pSRAM arrays.
 
     Pass either ``mesh`` (array count comes from the dist.sharding claim of
     ``logical_axis``) or an explicit ``n_arrays``; ``rank`` is required to
     build the per-array programs. Each shard keeps original coordinates, so
-    per-array results add straight into the global output.
+    per-array results add straight into the global output. Shards may be
+    empty when fibers < arrays — their programs are empty and price zero.
     """
     if (mesh is None) == (n_arrays is None):
         raise ValueError("pass exactly one of mesh / n_arrays")
@@ -171,7 +267,8 @@ def partition_csf(
         n_arrays = arrays_for_mesh(mesh, logical_axis, rules)
     if rank is None:
         raise ValueError("rank is required to build the per-array schedules")
-    ps = partition_fiber_lengths(csf.fiber_lengths(), n_arrays, rank, config)
+    ps = partition_fiber_lengths(csf.fiber_lengths(), n_arrays, rank, config,
+                                 planner=planner)
     shards = tuple(
         csf.slice_roots(p.fiber_start, p.fiber_stop) for p in ps.partitions
     )

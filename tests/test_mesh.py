@@ -1,0 +1,355 @@
+"""Mesh-sharded streaming MTTKRP / CP-ALS (repro.sparse.mesh).
+
+Three contracts, in increasing scope:
+
+* **Planning + pricing** (single device, pure accounting): the makespan
+  planner never loses to the nnz cut it starts from, empty shards are
+  first-class and price zero cycles, and the analytical mesh price equals
+  the counted mesh schedule *exactly* — same partition boundaries, same
+  closed-form per-array counts, same all-reduce term — at every array
+  count, on the paper's §V-A operating point.
+* **Single-device execution**: the ``"psram-mesh"`` backend on one device
+  is bit-identical to ``"psram-stream"`` (its eager lowering), and the
+  compiled / fused lowerings stay inside their documented envelopes.
+* **Multi-device execution** (subprocess with 8 forced host devices, the
+  validation topology from the issue): the eager sharded stream is
+  bit-identical to the single-device stream at 1/2/4/8 arrays and
+  independent of device order — the planner never splits a root fiber, so
+  every output row has exactly one contributing shard and the ``psum``
+  adds exact zeros. CP-ALS fit through the mesh backend matches the
+  single-device fit to the Gram all-reduce's reassociation tolerance.
+"""
+import json
+import os
+import subprocess
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import backends
+from repro.core.cp_als import cp_als
+from repro.core.perf_model import (
+    DEFAULT_FABRIC,
+    MeshFabric,
+    MeshSparseMTTKRPWorkload,
+    allreduce_cycles,
+    mesh_sparse_price,
+    stream_counts,
+)
+from repro.launch.mesh import make_array_mesh
+from repro.serve.engine import offload_report, sparse_offload_report
+from repro.sparse import (
+    PLANNERS,
+    csf_for_mode,
+    mesh_counted_price,
+    mesh_gram,
+    mesh_stream_mttkrp,
+    partition_fiber_lengths,
+    plan_partitions,
+    powerlaw_coo,
+    powerlaw_fiber_lengths,
+    stream_mttkrp,
+)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return backends.resolve_config(None)  # paper §V-A operating point
+
+
+@pytest.fixture(scope="module")
+def fibers():
+    return powerlaw_fiber_lengths(1, n_rows=500, nnz=20000)
+
+
+@pytest.fixture(scope="module")
+def small_tensor():
+    key = jax.random.PRNGKey(0)
+    coo = powerlaw_coo(key, (40, 30, 20), nnz=2000)
+    factors = [jax.random.normal(jax.random.fold_in(key, i), (s, 16))
+               for i, s in enumerate((40, 30, 20))]
+    return coo, factors
+
+
+# ---------------------------------------------------------------- planning
+
+
+def _makespan(cfg, f, parts, rank):
+    return max(stream_counts(cfg, f[p.fiber_start:p.fiber_stop], rank)
+               .total_cycles for p in parts)
+
+
+def test_planner_front_door(cfg, fibers):
+    with pytest.raises(ValueError, match="planner"):
+        plan_partitions(fibers, 4, 32, cfg, planner="best-effort")
+    assert set(PLANNERS) == {"nnz", "makespan"}
+    for planner in PLANNERS:
+        parts = plan_partitions(fibers, 4, 32, cfg, planner=planner)
+        assert len(parts) == 4
+        # contiguous cover of the fiber axis, monotone boundaries
+        assert parts[0].fiber_start == 0
+        assert parts[-1].fiber_stop == len(fibers)
+        for a, b in zip(parts, parts[1:]):
+            assert a.fiber_stop == b.fiber_start
+        assert sum(p.nnz for p in parts) == int(fibers.sum())
+
+
+def test_makespan_planner_never_loses_to_nnz(cfg, fibers):
+    for a in (2, 4, 8):
+        nnz = plan_partitions(fibers, a, 32, cfg, planner="nnz")
+        mk = plan_partitions(fibers, a, 32, cfg, planner="makespan")
+        assert _makespan(cfg, fibers, mk, 32) <= _makespan(cfg, fibers, nnz, 32)
+
+
+def test_empty_shards_are_first_class(cfg):
+    # more arrays than fibers: graceful degradation, not a crash — the
+    # surplus arrays get empty partitions priced at zero cycles
+    tiny = np.array([5, 3, 2])
+    for planner in PLANNERS:
+        parts = plan_partitions(tiny, 8, 8, cfg, planner=planner)
+        assert len(parts) == 8
+        assert sum(p.nnz for p in parts) == 10
+        empties = [p for p in parts if p.nnz == 0]
+        assert empties, "8 arrays over 3 fibers must leave empty shards"
+        for p in empties:
+            assert p.fiber_start == p.fiber_stop
+            assert stream_counts(cfg, tiny[p.fiber_start:p.fiber_stop], 8) \
+                .total_cycles == 0
+    price, ps = mesh_counted_price(tiny, 8, cfg, n_arrays=8)
+    zero_priced = [c for c in price.per_array if c.total_cycles == 0]
+    assert len(zero_priced) == len(empties)
+    # the split costs exactly what the work costs — empties add nothing
+    assert sum(c.total_cycles for c in price.per_array) > 0
+    # and the partition front-door threads the planner choice through
+    ps2 = partition_fiber_lengths(tiny, 8, 8, cfg, planner="makespan")
+    assert len(ps2.programs) == 8
+
+
+# ----------------------------------------------------------------- pricing
+
+
+def test_allreduce_closed_form():
+    fab = MeshFabric(reduce_words=256)
+    assert fab.allreduce_cycles(100, 32, 1) == 0          # single array
+    assert fab.allreduce_cycles(0, 32, 8) == 0            # empty output
+    # ceil(log2(8)) = 3 ring steps x ceil(100*32/256) words
+    assert fab.allreduce_cycles(100, 32, 8) == 3 * -(-(100 * 32) // 256)
+    assert allreduce_cycles(100, 32, 8) == \
+        DEFAULT_FABRIC.allreduce_cycles(100, 32, 8)
+
+
+def test_analytical_matches_counted_exactly(cfg, fibers):
+    """The acceptance contract: `"analytical"` equals counted per-array
+    cycles + reduction steps *exactly* on the §V-A config, per array count."""
+    for a in (1, 2, 4, 8):
+        wl = MeshSparseMTTKRPWorkload(fiber_lengths=fibers, rank=32,
+                                      n_arrays=a)
+        ana = mesh_sparse_price(cfg, wl)
+        cnt, _ = mesh_counted_price(fibers, 32, cfg, n_arrays=a)
+        assert ana.per_array == cnt.per_array          # field-for-field
+        assert ana.makespan_cycles == cnt.makespan_cycles
+        assert ana.reduce_cycles == cnt.reduce_cycles
+        assert ana.counts == cnt.counts
+        assert ana.duration_s(cfg) == cnt.duration_s(cfg)
+        if a > 1:
+            assert cnt.reduce_cycles > 0
+    # and through the registry: the analytical backend's bill for the mesh
+    # workload equals the mesh backend's counted bill
+    wl = MeshSparseMTTKRPWorkload(fiber_lengths=fibers, rank=32, n_arrays=4)
+    ana_est = backends.get("analytical", cfg).cost(wl)
+    cnt_est = backends.get("psram-mesh", cfg).cost(wl)
+    assert ana_est.time_s == cnt_est.time_s
+    assert ana_est.counts == cnt_est.counts
+
+
+def test_mesh_price_scales_down_makespan(cfg, fibers):
+    times = []
+    for a in (1, 2, 4, 8):
+        price, _ = mesh_counted_price(fibers, 32, cfg, n_arrays=a)
+        times.append(price.total_cycles)
+    assert times[0] > times[1] > times[2] > times[3]
+
+
+# ----------------------------------------------- single-device execution
+
+
+def test_mesh_backend_registered():
+    assert "psram-mesh" in backends.list_backends()
+    be = backends.get("psram-mesh")
+    caps = be.capabilities()
+    assert caps.executes and caps.cost_model and caps.sparse
+    assert not caps.matmul
+    assert caps.lossy and caps.rel_tol == 0.05
+    assert "sparse" in caps.prices
+    assert caps.bit_exact            # eager default
+    assert not backends.get("psram-mesh", lowering="fused") \
+        .capabilities().bit_exact
+    with pytest.raises(ValueError, match="lowering"):
+        backends.get("psram-mesh", lowering="vectorized")
+
+
+def test_mesh_single_device_bitwise_vs_stream(small_tensor):
+    coo, factors = small_tensor
+    csf = csf_for_mode(coo, 0)
+    ref = np.asarray(stream_mttkrp(csf, factors, psram=True))
+    got = np.asarray(mesh_stream_mttkrp(csf, factors, n_arrays=1,
+                                        lowering="eager"))
+    assert np.array_equal(ref, got)
+    # through the registry, from raw COO (backend sorts into CSF itself)
+    be = backends.get("psram-mesh")
+    assert np.array_equal(ref, np.asarray(be.mttkrp(coo, factors, 0)))
+
+
+def test_mesh_lowering_envelopes(small_tensor):
+    coo, factors = small_tensor
+    csf = csf_for_mode(coo, 0)
+    exact = np.asarray(backends.get("exact").mttkrp(coo, factors, 0))
+    for lowering, tol in (("eager", 0.05), ("compiled", 0.05),
+                          ("fused", 0.05)):
+        got = np.asarray(mesh_stream_mttkrp(csf, factors, n_arrays=1,
+                                            lowering=lowering))
+        rel = np.linalg.norm(got - exact) / np.linalg.norm(exact)
+        assert rel < tol, (lowering, rel)
+
+
+def test_mesh_gram_matches_local(small_tensor):
+    _, factors = small_tensor
+    for f in factors:
+        g = np.asarray(mesh_gram(f))
+        assert np.allclose(g, np.asarray(f.T @ f), rtol=1e-5, atol=1e-5)
+    # default Backend.gram is the local product, bitwise
+    f = factors[0]
+    assert np.array_equal(np.asarray(backends.get("psram-stream").gram(f)),
+                          np.asarray(f.T @ f))
+
+
+def test_make_array_mesh_validates():
+    with pytest.raises(ValueError):
+        make_array_mesh(0)
+    with pytest.raises(ValueError):
+        make_array_mesh(len(jax.devices()) + 1)
+    mesh = make_array_mesh()
+    assert mesh.axis_names == ("array",)
+
+
+# ------------------------------------------------------------- serve wire
+
+
+def test_offload_report_mesh_keys(fibers):
+    rep = offload_report(fibers, rank=16)
+    rep4 = offload_report(fibers, rank=16, n_arrays=4)
+    for r, a in ((rep, 1), (rep4, 4)):
+        assert r["backend"] == "psram-stream"
+        assert r["n_arrays"] == a
+        assert r["makespan_cycles"] > 0
+        assert r["reduce_cycles"] == (0 if a == 1 else
+                                      allreduce_cycles(len(fibers), 16, a))
+    # splitting across arrays is a win even after paying for the reduction
+    assert rep4["time_s"] < rep["time_s"]
+    # a mesh workload carries its own topology, overriding the kwarg
+    wl = MeshSparseMTTKRPWorkload(fiber_lengths=fibers, rank=16, n_arrays=4,
+                                  fabric=MeshFabric(reduce_words=64))
+    repw = offload_report(wl, n_arrays=1)
+    assert repw["n_arrays"] == 4
+    assert repw["reduce_cycles"] == \
+        MeshFabric(reduce_words=64).allreduce_cycles(len(fibers), 16, 4)
+
+
+def test_deprecated_sparse_report_keeps_old_numbers(fibers):
+    rep = offload_report(fibers, rank=16)
+    with pytest.deprecated_call():
+        old = sparse_offload_report(fibers, rank=16)
+    # at one array the legacy nnz cut and the mesh plan coincide: one
+    # partition, no reduction — the pinned cycles keep reproducing
+    assert old["cycles"] == rep["cycles"]
+    assert old["time_s"] == pytest.approx(rep["time_s"])
+    # but the legacy path never learns the mesh vocabulary
+    assert "makespan_cycles" not in old
+    with pytest.deprecated_call():
+        old4 = sparse_offload_report(fibers, rank=16, n_arrays=4)
+    # legacy multi-array time is the nnz cut's critical path, reduce-free
+    ps = partition_fiber_lengths(fibers, 4, 16)
+    cfg = backends.resolve_config(None)
+    assert old4["time_s"] == pytest.approx(
+        ps.critical_path_cycles / (cfg.frequency_ghz * 1e9))
+
+
+# --------------------------------------------------- multi-device (8 dev)
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax
+import jax.sharding as shd
+from repro.backends import get as get_backend
+from repro.core.cp_als import cp_als
+from repro.sparse import (csf_for_mode, mesh_gram, mesh_stream_mttkrp,
+                          powerlaw_coo, stream_mttkrp)
+
+key = jax.random.PRNGKey(0)
+coo = powerlaw_coo(key, (40, 30, 20), nnz=2000)
+csf = csf_for_mode(coo, 0)
+factors = [jax.random.normal(jax.random.fold_in(key, i), (s, 16))
+           for i, s in enumerate((40, 30, 20))]
+ref = np.asarray(stream_mttkrp(csf, factors, psram=True))
+
+out = {"n_devices": len(jax.devices())}
+out["eager_bitwise"] = {
+    str(a): bool(np.array_equal(ref, np.asarray(
+        mesh_stream_mttkrp(csf, factors, n_arrays=a, lowering="eager"))))
+    for a in (1, 2, 4, 8)
+}
+# shard-order independence: reverse the device order in the mesh
+mesh_rev = shd.Mesh(np.asarray(jax.devices()[:4][::-1]), ("array",))
+out["reversed_bitwise"] = bool(np.array_equal(ref, np.asarray(
+    mesh_stream_mttkrp(csf, factors, mesh=mesh_rev, lowering="eager"))))
+out["fused_rel"] = float(
+    np.linalg.norm(np.asarray(mesh_stream_mttkrp(
+        csf, factors, n_arrays=8, lowering="fused")) - ref)
+    / np.linalg.norm(ref))
+f0 = factors[0]
+out["gram_ok"] = bool(np.allclose(
+    np.asarray(mesh_gram(f0, n_arrays=8)), np.asarray(f0.T @ f0),
+    rtol=1e-5, atol=1e-5))
+csfs = [csf_for_mode(coo, m) for m in range(3)]
+fits = {}
+for name, kw in (("psram-stream", {}), ("psram-mesh", {"n_arrays": 8})):
+    st = cp_als(None, rank=8, n_iter=8, backend=get_backend(name, **kw),
+                sparse=coo, csfs=csfs, key=jax.random.PRNGKey(7))
+    fits[name] = float(st.fit)
+out["fits"] = fits
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.timeout(560)
+def test_mesh_eight_devices_subprocess():
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=540,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    assert out["n_devices"] == 8
+    # the eager sharded stream is the single-device stream, bit for bit,
+    # whatever the array count and whatever order the devices come in
+    assert all(out["eager_bitwise"].values()), out["eager_bitwise"]
+    assert out["reversed_bitwise"]
+    assert out["fused_rel"] < 0.05
+    assert out["gram_ok"]
+    assert fits_close(out["fits"])
+
+
+def fits_close(fits, tol=1e-3):
+    return abs(fits["psram-stream"] - fits["psram-mesh"]) < tol

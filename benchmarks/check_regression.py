@@ -30,15 +30,33 @@ def _last_by_name(rows: list[dict]) -> dict[str, dict]:
 
 def compare(new_rows: list[dict], base_rows: list[dict],
             max_slowdown: float = 2.0, backends: set | None = None,
-            min_us: float = 1000.0) -> list[dict]:
-    """Return the list of comparisons; entry['failed'] marks regressions."""
+            min_us: float = 1000.0, dropped: list | None = None) -> list[dict]:
+    """Return the list of comparisons; entry['failed'] marks regressions.
+
+    When ``dropped`` is a list, every row excluded from the comparison is
+    appended to it as ``(name, reason)`` — so a gate that compares nothing
+    can say exactly why, instead of silently passing.
+    """
     new, base = _last_by_name(new_rows), _last_by_name(base_rows)
+
+    def drop(name: str, reason: str) -> None:
+        if dropped is not None:
+            dropped.append((name, reason))
+
+    for name in sorted(set(new) - set(base)):
+        drop(name, "not in baseline trajectory (new bench row?)")
+    for name in sorted(set(base) - set(new)):
+        drop(name, "not emitted by the new run (bench gone quiet?)")
     results = []
     for name in sorted(set(new) & set(base)):
         n, b = new[name], base[name]
         if backends is not None and n.get("backend") not in backends:
+            drop(name, f"backend {n.get('backend', '?')!r} not gated")
             continue
         if n["us_per_call"] < min_us or b["us_per_call"] < min_us:
+            side = "new" if n["us_per_call"] < min_us else "baseline"
+            drop(name, f"below --min-us {min_us:g} in {side} file "
+                       f"(modeled/noise-scale row)")
             continue
         ratio = n["us_per_call"] / b["us_per_call"]
         results.append({
@@ -84,8 +102,14 @@ def main(argv=None) -> int:
                   f"{', '.join(missing)}")
             return 1
     backends = set(args.backends.split(",")) if args.backends else None
+    dropped: list[tuple[str, str]] = []
     results = compare(new_rows, base_rows, args.max_slowdown, backends,
-                      args.min_us)
+                      args.min_us, dropped=dropped)
+    if dropped:
+        print(f"# {len(dropped)} row(s) excluded from the gate:")
+        dwidth = max(len(n) for n, _ in dropped)
+        for name, reason in dropped:
+            print(f"#   {name:<{dwidth}}  {reason}")
     if not results:
         print("no comparable wall-clock rows between the two files "
               "(names must match exactly) — nothing gated")

@@ -23,6 +23,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.cp_als import cp_als, cp_als_psram
 from repro.core.mttkrp import dense_to_coo, mttkrp_dense, mttkrp_sparse
 from repro.core.perf_model import (
@@ -325,6 +326,11 @@ def bench_sparse_mttkrp(smoke: bool = False):
         s = csf.to_coo()
         exact = mttkrp_sparse(s.indices, s.values, fs, 0, shape[0])
         prog = build_stream_program(csf.fiber_lengths(), rank, cfg)
+        if obs.enabled():
+            # cycle-domain view of this exact schedule: per-channel tracks
+            # in the trace (--trace), alongside the wall-clock spans
+            obs.get_tracer().add_events(obs.program_timeline(
+                prog, name=f"stream d{dens:g} nnz{coo.nnz}"))
         counts = count_cycles(prog)
         measured = measured_utilization(prog)
         model = sustained_mttkrp(cfg, SparseMTTKRPWorkload(
@@ -562,6 +568,11 @@ def bench_mesh(smoke: bool = False):
                  and ana.total_cycles == price.total_cycles)
         if base_cycles is None:
             base_cycles = price.total_cycles
+        if obs.enabled() and a == 4:
+            # one mesh timeline in the trace: per-array shard tracks plus
+            # the fabric all-reduce, at the 4-array §V-B operating point
+            obs.get_tracer().add_events(obs.mesh_timeline(
+                fibers, rank, config=cfg, n_arrays=a))
         row(f"mesh_price_a{a}_nnz{coo.nnz}",
             _model_time(lambda: mesh_counted_price(
                 fibers, rank, cfg, n_arrays=a), n=3),
@@ -614,9 +625,16 @@ def main(argv=None) -> None:
                     metavar="NAME", choices=backends.list_backends(),
                     help="scope the run to benches exercising this backend "
                          "(repeatable; default: all registered)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="enable tracing for the whole run and write a "
+                         "Chrome trace_event JSON (open in Perfetto): "
+                         "wall-clock spans plus cycle-domain schedule-IR "
+                         "and mesh shard timelines")
     args = ap.parse_args(argv)
     global SELECTED
     SELECTED = set(args.backend) if args.backend else None
+    if args.trace:
+        obs.enable()
     print("name,us_per_call,derived,backend")
     bench_fig5_channels()
     bench_fig5_frequency()
@@ -641,6 +659,9 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             json.dump(ROWS, f, indent=2)
         print(f"# wrote {len(ROWS)} rows to {args.json}")
+    if args.trace:
+        n = obs.write_trace(args.trace)
+        print(f"# wrote {n} trace events to {args.trace}")
 
 
 if __name__ == "__main__":

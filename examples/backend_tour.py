@@ -10,10 +10,11 @@ prints:
 
 1. the execution table — wall-clock and relative error vs ``"exact"`` for
    every executable backend (each within its documented ``rel_tol``);
-2. the estimate-vs-measured utilization table — each cost-modeling
-   backend's ``api.estimate`` against the counted-cycle utilization of the
-   schedule that actually ran (``perf_model.measured_utilization``), on
-   both the dense §V-A-style descriptor and a power-law sparse workload.
+2. the drift table — ``obs.drift_report`` pricing each workload through the
+   analytical backend *and* the counted schedules, on both the dense
+   §V-A-style descriptor and a power-law sparse workload: the
+   estimate==measured contract as one audited table (drift is exactly 0 on
+   the paper's operating point).
 
 Run:  PYTHONPATH=src python examples/backend_tour.py
 """
@@ -22,14 +23,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import api, backends
-from repro.core.perf_model import (
-    MTTKRPWorkload,
-    SparseMTTKRPWorkload,
-    measured_utilization,
-)
-from repro.core.schedule import build_mttkrp_program
-from repro.sparse import build_stream_program, csf_for_mode, powerlaw_coo
+from repro import api, backends, obs
+from repro.core.perf_model import MTTKRPWorkload, SparseMTTKRPWorkload
+from repro.sparse import csf_for_mode, powerlaw_coo
 
 
 def main():
@@ -56,35 +52,28 @@ def main():
         assert rel <= max(caps.rel_tol, 1e-5), (name, rel)
         print(f"{name:18s} {'yes':9s} {ms:8.1f} {rel:8.4f}  {caps.rel_tol:g}")
 
-    # ---- estimate vs measured: dense §V-A-style descriptor -----------------
-    cfg = backends.resolve_config(None)
-    wl = MTTKRPWorkload()  # the paper's 1e6^3, rank 32
-    meas = measured_utilization(build_mttkrp_program(cfg, wl))
-    print("\nestimate vs measured, dense §V-A workload (1e6^3, R=32):")
-    print(f"{'backend':18s} {'est util':>9s} {'est POps':>9s}   measured "
-          f"util={meas.utilization:.4f}")
-    for name in ("analytical", "psram-scheduled", "psram-oracle"):
-        est = api.estimate(wl, backend=name)
-        flag = "== measured" if est.utilization == meas.utilization else \
-            f"vs {meas.utilization:.4f}"
-        print(f"{name:18s} {est.utilization:9.4f} "
-              f"{est.sustained_petaops:9.3f}   {flag}")
-
-    # ---- estimate vs measured: sparse power-law workload -------------------
+    # ---- the drift table: analytical estimate vs counted schedule ----------
+    # obs.drift_report prices each workload through the analytical closed
+    # form AND every counted backend that can bill it, and reports the
+    # relative disagreement — the estimate==measured contract, audited.
     coo = powerlaw_coo(jax.random.PRNGKey(7), (600, 500, 400), nnz=40_000,
                        rank=4, alpha=1.2)
     csf = csf_for_mode(coo, 0)
-    swl = SparseMTTKRPWorkload(fiber_lengths=csf.fiber_lengths(), rank=rank)
-    smeas = measured_utilization(
-        build_stream_program(csf.fiber_lengths(), rank, cfg))
-    print(f"\nestimate vs measured, sparse power-law workload "
-          f"(nnz={coo.nnz}):")
-    for name in ("analytical", "psram-stream"):
-        est = api.estimate(swl, backend=name)
-        flag = "== measured" if est.utilization == smeas.utilization else \
-            f"vs {smeas.utilization:.4f}"
-        print(f"{name:18s} {est.utilization:9.4f} "
-              f"{est.sustained_petaops:9.4f}   {flag}")
+    report = obs.drift_report(workloads={
+        # the paper's dense §V-A descriptor (1e6^3, R=32), checked against
+        # both scheduled counters
+        "mttkrp/dense/sVA": MTTKRPWorkload(),
+        # this tour's own sparse tensor, checked against the stream schedule
+        "mttkrp/sparse/powerlaw": (
+            SparseMTTKRPWorkload(fiber_lengths=csf.fiber_lengths(),
+                                 rank=rank),
+            ("psram-stream",),
+        ),
+    })
+    print(f"\nanalytical-vs-counted drift (sparse nnz={coo.nnz}):")
+    print(report.table())
+    print(f"max drift: {report.max_drift:.3e} "
+          f"{'(estimate == measured, exactly)' if report.max_drift == 0 else ''}")
 
     # and the streamed engine really produces the exact segment-sum answer
     got = api.execute(api.MTTKRPProblem(csf, fs_for(coo.shape, rank), 0),

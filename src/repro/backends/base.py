@@ -206,6 +206,11 @@ def get(name: "str | Backend", config: PsramConfig | None = None,
     constructor (e.g. ``compiled=True`` on the two pSRAM schedule backends,
     ``lowering=`` on ``"pallas"``); a backend that doesn't take them raises
     ``TypeError`` — the capability simply doesn't exist there.
+
+    When tracing is enabled (``repro.obs``), constructed backends come back
+    wrapped in an ``InstrumentedBackend`` that spans every protocol call
+    with workload metadata; passed-through instances are never wrapped
+    implicitly (the caller owns an instance's identity).
     """
     _ensure_builtin()
     if isinstance(name, Backend):
@@ -219,7 +224,10 @@ def get(name: "str | Backend", config: PsramConfig | None = None,
         raise UnknownBackendError(
             f"unknown backend {name!r}; registered: {', '.join(_REGISTRY)}"
         )
-    return _REGISTRY[name](config, **kwargs)
+    backend = _REGISTRY[name](config, **kwargs)
+    from repro.obs.instrument import maybe_instrument
+
+    return maybe_instrument(backend)
 
 
 def _ensure_builtin() -> None:

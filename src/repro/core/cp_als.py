@@ -22,6 +22,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 from .mttkrp import khatri_rao, mttkrp_dense, mttkrp_sparse
 from .psram import PsramConfig
 from .quantization import ADCConfig
@@ -279,25 +281,31 @@ def cp_als(
     # per-shard partial Grams — the sweep then executes SPMD end to end.
     gram = be.gram if be is not None else (lambda f: f.T @ f)
     grams = [gram(f) for f in factors]
+    backend_name = be.name if be is not None else (
+        "callable" if callable_fn is not None else "default")
     for it in range(1, n_iter + 1):
-        for mode in range(len(shape)):
-            m = fn(x, factors, mode)                      # MTTKRP
-            g = _hadamard_of(grams, mode)                 # (R, R)
-            a = m @ jnp.linalg.pinv(g)
-            lam = jnp.maximum(jnp.linalg.norm(a, axis=0), 1e-12)
-            factors[mode] = a / lam
-            grams[mode] = gram(factors[mode])
-        # fit = 1 - ||X - X_hat|| / ||X||, via the standard inner-product trick
-        g_all = _hadamard_of(grams, skip=-1) * jnp.outer(lam, lam)
-        # <X, X_hat> needs the final-mode MTTKRP against the *current* other
-        # factors — m already is that (they don't change after the last
-        # update). A lossy backend's m would bias the metric, so recompute
-        # it exactly when asked.
-        m_fit = exact_last_mode_fn(x, factors, last) if exact_fit else m
-        inner = jnp.sum(m_fit * (factors[-1] * lam))
-        norm_hat_sq = jnp.sum(g_all)
-        resid = jnp.sqrt(jnp.maximum(norm_x**2 + norm_hat_sq - 2 * inner, 0.0))
-        fit = float(1.0 - resid / norm_x)
+        with obs.span("als/sweep", iteration=it, backend=backend_name,
+                      rank=rank):
+            for mode in range(len(shape)):
+                m = fn(x, factors, mode)                      # MTTKRP
+                g = _hadamard_of(grams, mode)                 # (R, R)
+                a = m @ jnp.linalg.pinv(g)
+                lam = jnp.maximum(jnp.linalg.norm(a, axis=0), 1e-12)
+                factors[mode] = a / lam
+                grams[mode] = gram(factors[mode])
+        with obs.span("als/fit", iteration=it, exact=bool(exact_fit)):
+            # fit = 1 - ||X - X_hat|| / ||X||, the standard inner-product trick
+            g_all = _hadamard_of(grams, skip=-1) * jnp.outer(lam, lam)
+            # <X, X_hat> needs the final-mode MTTKRP against the *current*
+            # other factors — m already is that (they don't change after the
+            # last update). A lossy backend's m would bias the metric, so
+            # recompute it exactly when asked.
+            m_fit = exact_last_mode_fn(x, factors, last) if exact_fit else m
+            inner = jnp.sum(m_fit * (factors[-1] * lam))
+            norm_hat_sq = jnp.sum(g_all)
+            resid = jnp.sqrt(
+                jnp.maximum(norm_x**2 + norm_hat_sq - 2 * inner, 0.0))
+            fit = float(1.0 - resid / norm_x)
         if abs(fit - prev_fit) < tol:
             break
         prev_fit = fit

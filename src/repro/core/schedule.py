@@ -49,6 +49,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 from .psram import PsramArray, PsramConfig
 from .quantization import ADCConfig, QMAX, adc_requantize, quantize_symmetric
 
@@ -376,26 +378,30 @@ def execute_reference(program: TileProgram, x: jax.Array, w: jax.Array) -> jax.A
     cfg = program.config
     m, k, n = program.shape
     assert x.shape == (m, k) and w.shape == (k, n), (x.shape, w.shape, program.shape)
-    out = np.zeros((m, n), dtype=np.float32)
-    arr = PsramArray(cfg)
-    tile = None
-    cur = None
-    for op in program.ops:
-        if isinstance(op, StoreTile):
-            cur = op
-            tile = arr.store(w[op.k0:op.k1, op.n0:op.n1])
-        else:
-            xt = (
-                jnp.zeros((op.m1 - op.m0, cfg.rows))
-                .at[:, : cur.k1 - cur.k0]
-                .set(x[op.m0:op.m1, cur.k0:cur.k1])
-            )
-            chan = jnp.arange(op.m1 - op.m0, dtype=jnp.int32)
-            acc = tile.multiply_accumulate(xt, chan)  # (cols, wavelengths)
-            out[op.m0:op.m1, cur.n0:cur.n1] += np.asarray(
-                acc[: cur.n1 - cur.n0, : op.m1 - op.m0].T
-            )
-    return jnp.asarray(out)
+    with obs.span("schedule/execute/reference", m=m, k=k, n=n,
+                  ops=len(program.ops)):
+        if obs.enabled():
+            obs.counter("schedule/reference_ops", len(program.ops))
+        out = np.zeros((m, n), dtype=np.float32)
+        arr = PsramArray(cfg)
+        tile = None
+        cur = None
+        for op in program.ops:
+            if isinstance(op, StoreTile):
+                cur = op
+                tile = arr.store(w[op.k0:op.k1, op.n0:op.n1])
+            else:
+                xt = (
+                    jnp.zeros((op.m1 - op.m0, cfg.rows))
+                    .at[:, : cur.k1 - cur.k0]
+                    .set(x[op.m0:op.m1, cur.k0:cur.k1])
+                )
+                chan = jnp.arange(op.m1 - op.m0, dtype=jnp.int32)
+                acc = tile.multiply_accumulate(xt, chan)  # (cols, wavelengths)
+                out[op.m0:op.m1, cur.n0:cur.n1] += np.asarray(
+                    acc[: cur.n1 - cur.n0, : op.m1 - op.m0].T
+                )
+        return jnp.asarray(out)
 
 
 # ---------------------------------------------------------------------------
@@ -534,11 +540,15 @@ def execute(program: TileProgram, x: jax.Array, w: jax.Array,
     m, k, n = program.shape
     if x.shape != (m, k) or w.shape != (k, n):
         raise ValueError(f"operands {x.shape}@{w.shape} don't match program {program.shape}")
-    if compiled:
-        return compiled_matmul_executor(m, k, n, cfg)(x, w)
-    return _execute_tiles(
-        x, w,
-        rows=cfg.rows, cols=cfg.word_cols, wav=cfg.wavelengths,
-        kt=-(-k // cfg.rows), nt=-(-n // cfg.word_cols), mt=-(-m // cfg.wavelengths),
-        adc_bits=cfg.adc.bits, saturate=cfg.adc.saturate,
-    )
+    with obs.span("schedule/execute/matmul", m=m, k=k, n=n,
+                  compiled=compiled):
+        if obs.enabled():
+            obs.counter("schedule/programs_executed")
+        if compiled:
+            return compiled_matmul_executor(m, k, n, cfg)(x, w)
+        return _execute_tiles(
+            x, w,
+            rows=cfg.rows, cols=cfg.word_cols, wav=cfg.wavelengths,
+            kt=-(-k // cfg.rows), nt=-(-n // cfg.word_cols), mt=-(-m // cfg.wavelengths),
+            adc_bits=cfg.adc.bits, saturate=cfg.adc.saturate,
+        )

@@ -25,10 +25,10 @@ import dataclasses
 import json
 import math
 import os
-import time
 
 import jax
 
+from repro import obs
 from repro.core.psram import PsramConfig
 
 
@@ -102,13 +102,18 @@ def candidates(key: TuneKey) -> list[dict]:
     raise ValueError(f"unknown tune kind {key.kind!r}")
 
 
-def _median_time(fn, repeats: int = 3) -> float:
+def _median_time(fn, repeats: int = 3, name: str = "autotune/trial/run",
+                 **meta) -> float:
+    """Median wall-clock of ``fn`` over ``repeats`` — timed through the
+    ``obs`` stopwatch, so every trial run lands in the trace (with its
+    candidate params as span args) whenever tracing is on, at no cost when
+    it's off."""
     jax.block_until_ready(fn())          # warmup / compile outside the clock
     times = []
     for _ in range(repeats):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        times.append(time.perf_counter() - t0)
+        with obs.stopwatch(name, **meta) as sw:
+            jax.block_until_ready(fn())
+        times.append(sw.duration_s)
     times.sort()
     return times[len(times) // 2]
 
@@ -129,10 +134,20 @@ def get_params(key: TuneKey, measure=None, tune: bool = False,
     if not enabled(tune) or measure is None:
         return heuristic(key)
     best, best_t = None, float("inf")
-    for params in candidates(key):
-        t = _median_time(measure(params), repeats=repeats)
-        if t < best_t:
-            best, best_t = params, t
+    with obs.span("autotune/sweep", kind=key.kind, shape=str(key.shape),
+                  candidates=len(candidates(key))):
+        for params in candidates(key):
+            t = _median_time(measure(params), repeats=repeats,
+                             name="autotune/trial/run", kind=key.kind,
+                             **params)
+            if obs.enabled():
+                obs.counter("autotune/trials")
+            if t < best_t:
+                best, best_t = params, t
+    if obs.enabled():
+        with obs.span("autotune/winner", kind=key.kind, shape=str(key.shape),
+                      median_s=best_t, **best):
+            pass
     _WINNERS[key] = best
     return best
 

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import argparse
-import time
 
 
 def main():
@@ -43,10 +42,17 @@ def main():
         kwargs["frames"] = jax.random.normal(
             jax.random.PRNGKey(2), (args.batch, args.prompt_len * 4, cfg.d_model),
             dtype=jnp.dtype(cfg.dtype))
-    t0 = time.perf_counter()
-    toks = eng.generate(prompts, args.prompt_len, args.max_new,
-                        temperature=args.temperature, key=jax.random.PRNGKey(3), **kwargs)
-    dt = time.perf_counter() - t0
+    from repro import obs
+
+    # the obs stopwatch owns the measurement: the printed tok/s summary is
+    # sourced from it, and a "serve/generate" span lands in the trace
+    # whenever tracing is on
+    with obs.stopwatch("serve/generate", batch=args.batch,
+                       max_new=args.max_new, arch=args.arch) as sw:
+        toks = eng.generate(prompts, args.prompt_len, args.max_new,
+                            temperature=args.temperature,
+                            key=jax.random.PRNGKey(3), **kwargs)
+    dt = sw.duration_s
     total = args.batch * args.max_new
     print(f"generated {toks.shape} in {dt:.2f}s  ({total/dt:.1f} tok/s batched)")
     print("sample:", toks[0][:16].tolist())

@@ -1,0 +1,119 @@
+"""repro.obs — tracing, metrics, and cycle-accurate virtual timelines.
+
+One observability layer for every execution path: wall-clock spans and
+counters (:mod:`~repro.obs.tracer`), schedule-IR virtual timelines in the
+cycle domain (:mod:`~repro.obs.timeline`), the registry-level backend
+wrapper (:mod:`~repro.obs.instrument`), and the estimate-vs-measured drift
+auditor (:mod:`~repro.obs.drift`). Everything exports Chrome ``trace_event``
+JSON — one file, loadable in Perfetto / ``chrome://tracing``, with the
+wall-clock process next to one virtual process per array schedule.
+
+Usage::
+
+    from repro import obs
+
+    obs.enable()                              # or REPRO_TRACE=1
+    with obs.span("mesh/shard3/stream", nnz=12345):
+        ...
+    obs.counter("adc_conversions", 52)
+    obs.write_trace("trace.json")
+
+    sw = obs.stopwatch("train/step")          # times even when disabled
+    with sw:
+        ...
+    print(sw.duration_s)
+
+    print(obs.drift_report().table())         # estimate vs measured
+
+Span-naming convention — ``layer/component/detail``, slash-separated, three
+levels, lowercase:
+
+* **layer** — the subsystem: ``backend``, ``schedule``, ``stream``,
+  ``mesh``, ``als``, ``autotune``, ``train``, ``serve``, ``bench``,
+  ``obs``.
+* **component** — the object or phase within it: a backend name
+  (``backend/psram-stream/...``), an executor (``schedule/execute``), a
+  loop phase (``als/sweep``), a tuning key (``autotune/trial``).
+* **detail** — the operation or instance: ``mttkrp``, ``matmul``,
+  ``gram``, ``cost``, a shard index (``mesh/shard3/stream``), an
+  iteration tag.
+
+Two levels are fine when there is no meaningful third
+(``train/step``, ``serve/generate``); the first segment doubles as the
+Chrome ``cat`` field, so Perfetto can filter by layer. Metadata goes in
+span **args** (keyword arguments to ``span``/``stopwatch``), not in the
+name — names should aggregate across calls, args should vary.
+
+The tracer is zero-cost when disabled: ``span()`` returns a shared no-op
+context manager without reading a clock (overhead asserted in
+tests/test_obs.py). ``stopwatch()`` always measures and exposes
+``duration_s`` — it records an event only when tracing is enabled, so hot
+paths that need the number (trainer watchdog, autotune trials) pay one
+clock pair either way, exactly as before.
+"""
+from __future__ import annotations
+
+from .tracer import (
+    Stopwatch,
+    Tracer,
+    counter,
+    disable,
+    enable,
+    enabled,
+    get_tracer,
+    span,
+    stopwatch,
+)
+
+__all__ = [
+    "Stopwatch",
+    "Tracer",
+    "counter",
+    "disable",
+    "drift_report",
+    "enable",
+    "enabled",
+    "get_tracer",
+    "mesh_timeline",
+    "program_timeline",
+    "span",
+    "stopwatch",
+    "summary",
+    "write_trace",
+]
+
+
+def write_trace(path: str) -> int:
+    """Write the global tracer's Chrome trace JSON; returns event count."""
+    return get_tracer().write_trace(path)
+
+
+def summary() -> dict:
+    """Per-span-name aggregates of the global tracer."""
+    return get_tracer().summary()
+
+
+def program_timeline(program, pid=None, name="schedule-IR",
+                     max_events=100_000):
+    """Lazy front door of :func:`repro.obs.timeline.program_timeline`."""
+    from .timeline import program_timeline as impl
+
+    return impl(program, pid=pid, name=name, max_events=max_events)
+
+
+def mesh_timeline(fiber_lengths, rank, config=None, n_arrays=1,
+                  planner="makespan", fabric=None, out_rows=None,
+                  max_events=100_000):
+    """Lazy front door of :func:`repro.obs.timeline.mesh_timeline`."""
+    from .timeline import mesh_timeline as impl
+
+    return impl(fiber_lengths, rank, config=config, n_arrays=n_arrays,
+                planner=planner, fabric=fabric, out_rows=out_rows,
+                max_events=max_events)
+
+
+def drift_report(workloads=None, config=None, wall_times=None):
+    """Lazy front door of :func:`repro.obs.drift.drift_report`."""
+    from .drift import drift_report as impl
+
+    return impl(workloads=workloads, config=config, wall_times=wall_times)

@@ -41,6 +41,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import obs
 from repro.backends.base import resolve_config
 from repro.core.mttkrp import cp_chain_exact, cp_chain_psram
 from repro.core.psram import PsramConfig
@@ -274,22 +275,33 @@ def mesh_stream_mttkrp(
     rows = cfg.rows
     max_nnz = max(1, max(s.nnz for s in meshed.shards))
     eb = _exec_blocks(rows, max(1, -(-max_nnz // rows)), exec_blocks)
-    if lowering == "eager":
-        ip, rp, vp = _mesh_layout(csf, meshed, lowering, rows, eb)
-        fn = _mesh_executor(mesh, lowering, mode, out_rows, 0, psram,
-                            adc_bits)
-        return fn(ip, rp, vp, tuple(factors))
-    ip, vp, lp, sp, n_seg = _mesh_layout(csf, meshed, lowering, rows, eb)
-    if lowering == "fused":
-        from repro.kernels.stream_mttkrp import stream_factor_quants
+    # spans cannot cross into the jitted shard_map body; the per-shard view
+    # is host-side — one span per planned shard with its nnz (the imbalance
+    # the planner fought) plus the execute span around the SPMD dispatch.
+    # The cycle-domain per-array tracks come from obs.mesh_timeline.
+    if obs.enabled():
+        for i, s in enumerate(meshed.shards):
+            with obs.span(f"mesh/shard{i}/plan", nnz=s.nnz):
+                pass
+            obs.counter(f"mesh/shard{i}/nnz", s.nnz)
+    with obs.span("mesh/stream/execute", nnz=csf.nnz, n_arrays=n,
+                  lowering=lowering, planner=planner, mode=mode):
+        if lowering == "eager":
+            ip, rp, vp = _mesh_layout(csf, meshed, lowering, rows, eb)
+            fn = _mesh_executor(mesh, lowering, mode, out_rows, 0, psram,
+                                adc_bits)
+            return fn(ip, rp, vp, tuple(factors))
+        ip, vp, lp, sp, n_seg = _mesh_layout(csf, meshed, lowering, rows, eb)
+        if lowering == "fused":
+            from repro.kernels.stream_mttkrp import stream_factor_quants
 
-        quants = stream_factor_quants(tuple(factors), mode)
+            quants = stream_factor_quants(tuple(factors), mode)
+            fn = _mesh_executor(mesh, lowering, mode, out_rows, n_seg, psram,
+                                adc_bits)
+            return fn(ip, vp, lp, sp, quants)
         fn = _mesh_executor(mesh, lowering, mode, out_rows, n_seg, psram,
                             adc_bits)
-        return fn(ip, vp, lp, sp, quants)
-    fn = _mesh_executor(mesh, lowering, mode, out_rows, n_seg, psram,
-                        adc_bits)
-    return fn(ip, vp, lp, sp, tuple(factors))
+        return fn(ip, vp, lp, sp, tuple(factors))
 
 
 # ---------------------------------------------------------------------------

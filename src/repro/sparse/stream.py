@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.backends.base import resolve_config
 from repro.core.psram import PsramConfig
 from repro.core.mttkrp import cp_chain_exact, cp_chain_psram
@@ -342,16 +343,21 @@ def stream_mttkrp(
     rows = cfg.rows
     n_blocks = max(1, -(-max(1, csf.nnz) // rows))
     eb = _exec_blocks(rows, n_blocks, exec_blocks)
-    if compiled:
-        ip, vp, lp, sp, n_seg = _compiled_layout(csf, rows, eb)
-        return _stream_exec_compiled(
-            ip, vp, lp, sp, tuple(factors),
-            mode, csf.shape[mode], n_seg, psram, adc_bits,
+    with obs.span("stream/mttkrp/execute", nnz=csf.nnz, mode=mode,
+                  compiled=compiled, psram=psram, exec_blocks=eb):
+        if obs.enabled():
+            obs.counter("stream/nonzeros", csf.nnz)
+            obs.counter("stream/blocks", n_blocks)
+        if compiled:
+            ip, vp, lp, sp, n_seg = _compiled_layout(csf, rows, eb)
+            return _stream_exec_compiled(
+                ip, vp, lp, sp, tuple(factors),
+                mode, csf.shape[mode], n_seg, psram, adc_bits,
+            )
+        return _stream_exec(
+            csf.expanded_indices(), csf.values, tuple(factors),
+            mode, csf.shape[mode], rows, psram, adc_bits, eb,
         )
-    return _stream_exec(
-        csf.expanded_indices(), csf.values, tuple(factors),
-        mode, csf.shape[mode], rows, psram, adc_bits, eb,
-    )
 
 
 def blocked_fold_reference(

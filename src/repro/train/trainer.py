@@ -22,6 +22,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, batch_at_step
 from repro.dist.sharding import use_sharding
@@ -111,17 +112,20 @@ class Trainer:
         for step in range(self.start_step, self.start_step + num_steps):
             batch_t = batch_at_step(self.data_cfg, step)
             batch = {"tokens": batch_t[0], "labels": batch_t[1]}
-            t0 = time.perf_counter()
-            if self.error_feedback:
-                self.params, self.opt_state, metrics, self.residual = self.step_fn(
-                    self.params, self.opt_state, batch, self.residual
-                )
-            else:
-                self.params, self.opt_state, metrics = self.step_fn(
-                    self.params, self.opt_state, batch
-                )
-            jax.block_until_ready(metrics["loss"])
-            dt = time.perf_counter() - t0
+            # the obs stopwatch owns the step measurement: it always times
+            # (the watchdog and heartbeat need dt regardless) and records a
+            # "train/step" span whenever tracing is on
+            with obs.stopwatch("train/step", step=step) as sw:
+                if self.error_feedback:
+                    self.params, self.opt_state, metrics, self.residual = self.step_fn(
+                        self.params, self.opt_state, batch, self.residual
+                    )
+                else:
+                    self.params, self.opt_state, metrics = self.step_fn(
+                        self.params, self.opt_state, batch
+                    )
+                jax.block_until_ready(metrics["loss"])
+            dt = sw.duration_s
             # straggler watchdog
             if len(self.step_times) >= 5:
                 med = statistics.median(self.step_times[-20:])

@@ -46,6 +46,35 @@ def test_last_row_wins_for_duplicate_names():
     assert not res[0]["failed"]
 
 
+def test_dropped_rows_are_logged_with_reasons():
+    base = [_row("gone", 5000.0), _row("fast", 10.0),
+            _row("other", 9000.0, backend="exact"), _row("kept", 2000.0)]
+    new = [_row("fresh", 5000.0), _row("fast", 10.0),
+           _row("other", 9000.0, backend="exact"), _row("kept", 2100.0)]
+    dropped = []
+    res = check_regression.compare(new, base, min_us=1000.0,
+                                   backends={"psram-stream"},
+                                   dropped=dropped)
+    assert [r["name"] for r in res] == ["kept"]
+    reasons = dict(dropped)
+    assert set(reasons) == {"fresh", "gone", "fast", "other"}
+    assert "not in baseline" in reasons["fresh"]
+    assert "not emitted" in reasons["gone"]
+    assert "--min-us" in reasons["fast"]
+    assert "not gated" in reasons["other"]
+
+
+def test_main_logs_exclusions(tmp_path, capsys):
+    base = tmp_path / "base.json"
+    new = tmp_path / "new.json"
+    base.write_text(json.dumps([_row("a", 2000.0), _row("old", 2000.0)]))
+    new.write_text(json.dumps([_row("a", 2100.0), _row("tiny", 1.0)]))
+    assert check_regression.main([str(new), str(base)]) == 0
+    out = capsys.readouterr().out
+    assert "excluded from the gate" in out
+    assert "old" in out and "tiny" in out
+
+
 def test_main_exit_codes(tmp_path):
     base = tmp_path / "base.json"
     new = tmp_path / "new.json"

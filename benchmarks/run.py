@@ -95,11 +95,17 @@ def selected(*names) -> bool:
     return SELECTED is None or bool(SELECTED & set(names))
 
 
-def row(name, us, derived, backend="analytical"):
+def row(name, us, derived, backend="analytical", meta=None):
+    """Record one row. ``meta`` (optional dict) rides along in the JSON
+    only — the serve rows use it to pin the traffic seed and sweep params
+    so a regression can be replayed from the row alone."""
     if not selected(backend):
         return
-    ROWS.append({"name": name, "us_per_call": round(us, 1),
-                 "derived": str(derived), "backend": backend})
+    r = {"name": name, "us_per_call": round(us, 1),
+         "derived": str(derived), "backend": backend}
+    if meta is not None:
+        r["meta"] = meta
+    ROWS.append(r)
     print(f"{name},{us:.1f},{derived},{backend}")
 
 
@@ -599,6 +605,87 @@ def bench_mesh(smoke: bool = False):
             f"devices={n_dev}", "psram-mesh")
 
 
+# ------------------------------------------------------- live serving loop
+def bench_serve(smoke: bool = False):
+    """The live serving loop (repro.serve.loop) under synthetic traffic:
+    per-request p50/p99 latency, TTFT, and sustained throughput, with the
+    offload scheduler's modeled per-batch makespan recorded next to the
+    measured decode-step wall time.
+
+    Rows are tagged ``backend="serve"`` and are **presence-gated, not
+    ratio-gated**: `check_regression.py --require-prefixes serve_` fails if
+    they disappear, while the ratio gate's --backends list excludes
+    ``serve`` because queueing latency is wall-clock noisy. Each row's
+    ``meta`` pins the full traffic config (seed included) and the
+    arrival-rate sweep, so a regression replays from the row alone."""
+    import numpy as np
+
+    from repro.models.registry import get_config, get_module
+    from repro.serve import ServeLoop, ServeLoopConfig, TrafficConfig
+
+    if not selected("serve"):
+        return
+    arch = get_config("granite_8b").reduced()
+    params = get_module(arch).init(jax.random.PRNGKey(0), arch)
+    lc = ServeLoopConfig(max_batch=4, num_pages=24, page_size=8,
+                         speedup=200.0)
+    # one loop reused across streams: the KV pool drains to zero between
+    # runs (asserted) and reuse keeps the jit caches warm
+    loop = ServeLoop(arch, params, lc)
+    # compile every prefill pad and decode view bucket up front so the
+    # first measured row isn't jit-compile-dominated
+    loop.warmup(max_prompt=24, max_decode=12)
+    suffix = "_smoke" if smoke else ""
+    n_req = 24 if smoke else 120
+    rates = (60.0,) if smoke else (40.0, 120.0)
+    arrivals = ("poisson",) if smoke else ("poisson", "bursty")
+    for arrival in arrivals:
+        for rate in rates:
+            tc = TrafficConfig(
+                n_requests=n_req, seed=0, arrival=arrival, rate_rps=rate,
+                prompt_min=2, prompt_max=24, decode_min=2, decode_max=12,
+                vocab_size=arch.vocab_size)
+            rep = loop.run_sync(tc)
+            s = rep.summary()
+            assert s["leaked_pages"] == 0, "serve loop leaked KV pages"
+            # modeled-vs-measured per batch size (the offload decision trail,
+            # aggregated so the row stays readable)
+            by_batch: dict[int, dict] = {}
+            for o in rep.offload:
+                d = by_batch.setdefault(o["batch"], {
+                    "batch": o["batch"], "modeled_s": o["modeled_s"],
+                    "makespan_cycles": o["makespan_cycles"],
+                    "n_arrays": o["n_arrays"], "measured_s": []})
+                d["measured_s"].append(o["measured_s"])
+            per_batch = [
+                {**{k: v for k, v in d.items() if k != "measured_s"},
+                 "mean_measured_s": float(np.mean(d["measured_s"])),
+                 "steps": len(d["measured_s"])}
+                for _, d in sorted(by_batch.items())
+            ]
+            meta = {
+                "traffic": tc.asdict(),
+                "arrival_rate_sweep_rps": list(rates),
+                "loop": {"max_batch": lc.max_batch,
+                         "num_pages": lc.num_pages,
+                         "page_size": lc.page_size,
+                         "speedup": lc.speedup},
+                "per_batch_offload": per_batch,
+            }
+            row(f"serve_{arrival}_r{int(rate)}{suffix}",
+                s["p50_latency_s"] * 1e6,
+                f"p99={s['p99_latency_s']*1e3:.1f}ms "
+                f"ttft_p50={s['p50_ttft_s']*1e3:.1f}ms "
+                f"ttft_p99={s['p99_ttft_s']*1e3:.1f}ms "
+                f"tput={s['throughput_rps']:.1f}req/s "
+                f"{s['throughput_tok_s']:.0f}tok/s "
+                f"completed={s['completed']} preempt={s['preemptions']} "
+                f"offload={s['offload_fraction']:.2f} "
+                f"step_model={s['mean_modeled_step_s']*1e9:.1f}ns "
+                f"step_meas={s['mean_measured_step_s']*1e6:.0f}us",
+                "serve", meta=meta)
+
+
 def bench_scaling():
     """Beyond-paper: the 'scalable engine' (paper SIII) quantified — arrays
     scale linearly until the engine fabric saturates at the knee."""
@@ -654,6 +741,7 @@ def main(argv=None) -> None:
     bench_pallas_fused(smoke=args.smoke)
     bench_backend_matrix(smoke=args.smoke)
     bench_mesh(smoke=args.smoke)
+    bench_serve(smoke=args.smoke)
     bench_scaling()
     if args.json:
         with open(args.json, "w") as f:

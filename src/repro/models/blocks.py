@@ -169,16 +169,28 @@ def apply_decode_deltas(cache, deltas, cfg: ArchConfig, cache_pos):
     """Write the scan-stacked per-layer deltas back into the donated cache.
 
     Attention K/V: one dynamic-update-slice per leaf at (0, 0, cache_pos,..)
-    — G is a static index, only the sequence position is dynamic.
+    — G is a static index, only the sequence position is dynamic. With a
+    ``(B,)`` ``cache_pos`` (continuous batching: every row at its own
+    length) the write vmaps over the batch axis, one per-row slice each.
     SSM state/conv: full replacement (states are step-sized anyway)."""
+    pos = jnp.asarray(cache_pos, jnp.int32)
+    if pos.ndim:
+        def write(leaf, delta):
+            return jax.vmap(
+                lambda c, d, p: jax.lax.dynamic_update_slice(
+                    c, d, (0, p, 0, 0)),
+                in_axes=(1, 1, 0), out_axes=1,
+            )(leaf, delta, pos)
+    else:
+        def write(leaf, delta):
+            return jax.lax.dynamic_update_slice(
+                leaf, delta, (0, 0, pos, 0, 0))
     new_cache = {}
     for i, desc in enumerate(group_layout(cfg)):
         key = f"layer{i}"
         if desc.mixer == "attn":
             new_cache[key] = {
-                name: jax.lax.dynamic_update_slice(
-                    cache[key][name], deltas[key][name], (0, 0, cache_pos, 0, 0)
-                )
+                name: write(cache[key][name], deltas[key][name])
                 for name in ("k", "v")
             }
         else:

@@ -157,6 +157,33 @@ def prefill(params, tokens, cfg: ArchConfig, cache_len: int):
     return logits[:, 0], caches
 
 
+def prefill_paged(params, tokens, cfg: ArchConfig, last):
+    """Prefill for the paged serve loop: returns (logits at position
+    ``last``, UNPADDED caches).
+
+    Prompts arrive right-padded to a compile-size bucket, so the next-token
+    logits live at ``last = prompt_len - 1`` (a traced index — one compile
+    per bucket, not per prompt length), not at ``-1`` like :func:`prefill`;
+    causality makes the pad tail invisible to position ``last``. The caches
+    keep the bucket length — the caller scatters only the first
+    ``prompt_len`` token slots into its physical page slab, so there is no
+    ``cache_len`` padding here.
+    """
+    b, s = tokens.shape
+    pos = _positions(cfg, b, s)
+    x = _embed(params, tokens, cfg)
+
+    def body(h, p_group):
+        h, caches = group_fwd(p_group, h, cfg, pos, collect_cache=True)
+        return h, caches
+
+    x, caches = jax.lax.scan(body, x, params["blocks"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _unembed(
+        params, jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1), cfg)
+    return logits[:, 0], caches
+
+
 def _is_kv(a, s):
     return a.ndim == 5 and a.shape[2] == s  # (G, B, S, Hkv, hd)
 
@@ -167,17 +194,18 @@ def _pad_seq(a, cache_len, s):
     return jnp.pad(a, pad)
 
 
-def decode_step(params, cache, token, cache_pos, cfg: ArchConfig):
-    """One decode step. token: (B,) int32; cache_pos: scalar int32 (number of
-    tokens already in the cache). Returns (logits (B, V), new_cache).
+def decode_step_deltas(params, cache, token, cache_pos, cfg: ArchConfig):
+    """One decode step against a READ-ONLY cache view, returning the
+    per-layer one-token deltas instead of a written-back cache.
 
-    The cache enters the layer scan as READ-ONLY xs; the scan emits only
-    per-layer one-token deltas, written back afterwards with static-index
-    dynamic-update-slices (apply_decode_deltas). Returning the full cache
-    as scan ys would copy every layer's KV each step; carrying it with
-    in-body dynamic(g) updates defeats GSPMD — both measured in §Perf.
+    token: (B,) int32; cache_pos: scalar int32 (whole batch at one
+    position) or (B,) int32 (continuous batching: every row at its own
+    length). Returns (logits (B, V), deltas) where attention deltas are the
+    new token's (G, B, 1, Hkv, hd) k/v — the paged serve loop scatters
+    them into its physical page slab itself (`repro.serve.loop`), and
+    :func:`decode_step` writes them back densely via apply_decode_deltas.
     """
-    from .blocks import apply_decode_deltas, group_decode_tokens
+    from .blocks import group_decode_tokens
     x = _embed(params, token[:, None], cfg)
 
     def body(h, scanned):
@@ -186,6 +214,22 @@ def decode_step(params, cache, token, cache_pos, cfg: ArchConfig):
         return h, deltas
 
     x, deltas = jax.lax.scan(body, x, (params["blocks"], cache))
-    new_cache = apply_decode_deltas(cache, deltas, cfg, cache_pos)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    return _unembed(params, x, cfg)[:, 0], new_cache
+    return _unembed(params, x, cfg)[:, 0], deltas
+
+
+def decode_step(params, cache, token, cache_pos, cfg: ArchConfig):
+    """One decode step. token: (B,) int32; cache_pos: scalar int32 (number of
+    tokens already in the cache) or (B,) int32 for per-row positions.
+    Returns (logits (B, V), new_cache).
+
+    The cache enters the layer scan as READ-ONLY xs; the scan emits only
+    per-layer one-token deltas, written back afterwards with static-index
+    dynamic-update-slices (apply_decode_deltas). Returning the full cache
+    as scan ys would copy every layer's KV each step; carrying it with
+    in-body dynamic(g) updates defeats GSPMD — both measured in §Perf.
+    """
+    from .blocks import apply_decode_deltas
+    logits, deltas = decode_step_deltas(params, cache, token, cache_pos, cfg)
+    new_cache = apply_decode_deltas(cache, deltas, cfg, cache_pos)
+    return logits, new_cache

@@ -44,6 +44,17 @@ Chrome ``cat`` field, so Perfetto can filter by layer. Metadata goes in
 span **args** (keyword arguments to ``span``/``stopwatch``), not in the
 name — names should aggregate across calls, args should vary.
 
+The live serving loop (:mod:`repro.serve.loop`) instruments every engine
+phase under the ``serve`` layer: spans ``serve/admit`` (args: queue
+depth), ``serve/prefill`` (rid, prompt length), ``serve/decode`` (batch,
+view length), ``serve/offload`` (batch — the scheduler's pricing
+decision), ``serve/evict`` (rid of the preempted row); counters
+``serve/admitted``, ``serve/rejected``, ``serve/preempted``,
+``serve/prefills``, ``serve/decode_steps``, ``serve/tokens``. A traced
+serve run therefore shows the admission queue, each batch's step, and
+every preemption as stacked slices on the wall-clock track, next to the
+virtual mesh timelines.
+
 The tracer is zero-cost when disabled: ``span()`` returns a shared no-op
 context manager without reading a clock (overhead asserted in
 tests/test_obs.py). ``stopwatch()`` always measures and exposes

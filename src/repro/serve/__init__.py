@@ -1,9 +1,12 @@
-from .engine import (
-    ServeEngine,
-    make_prefill,
-    make_serve_step,
-    offload_report,
-    photonic_offload_report,
-    sparse_offload_report,
-)
+from .engine import ServeEngine, make_prefill, make_serve_step, offload_report
 from .kv_cache import PagedCacheConfig, PagedKVManager, gather_cache
+from .loop import RequestRecord, ServeLoop, ServeLoopConfig, ServeReport
+from .scheduler import BatchPrice, OffloadDecision, OffloadScheduler
+from .traffic import Request, TrafficConfig, generate
+
+
+def __getattr__(name):
+    # forward removed-adapter lookups to engine's pointed AttributeError
+    from . import engine
+
+    return getattr(engine, name)

@@ -13,12 +13,18 @@ or a sparse fiber-length distribution (including nnz-balanced multi-array
 splits) — counted compute/write cycles, measured utilization, §III-B
 energies, and (for projections) the end-to-end fidelity of the selected
 backend. The pre-registry `photonic_offload_report` /
-`sparse_offload_report` names remain as deprecation adapters.
+`sparse_offload_report` adapters were REMOVED in PR 9 (deprecation cycle
+since PR 4/PR 7) — the module raises a pointed AttributeError naming the
+replacement.
+
+The live request loop lives in `repro.serve.loop`; it builds on
+`make_prefill(cfg, paged=True)` / `make_serve_step(cfg, deltas=True)` — the
+paged variants that keep the KV cache in fixed-size pages instead of one
+dense per-batch slab.
 """
 from __future__ import annotations
 
 import contextlib
-import warnings
 from collections import Counter
 
 import jax
@@ -183,24 +189,19 @@ def _projection_report(cfg, backend, config, batch, fidelity):
     }
 
 
-def _sparse_report(workload, backend, config, n_arrays, fabric=None, *,
-                   legacy: bool = False):
+def _sparse_report(workload, backend, config, n_arrays, fabric=None):
     """Streaming sparse MTTKRP priced per array partition, model-checked.
 
-    The default path prices through the mesh makespan model
+    Prices through the mesh makespan model
     (:func:`repro.sparse.mesh.mesh_counted_price`): the makespan-planner
     split, per-array counted cycles, and the electrical fabric's all-reduce
-    of the partial outputs serialized after the slowest array. ``legacy=True``
-    keeps the pre-mesh numbers (nnz-balanced split, no reduction cost) for
-    the deprecated ``sparse_offload_report`` adapter, whose callers pinned
-    those cycles in their own baselines.
+    of the partial outputs serialized after the slowest array.
     """
     from repro import api, backends
     from repro.core.perf_model import (MeshSparseMTTKRPWorkload,
                                        breakdown_from_counts)
     from repro.core.schedule import program_energy
     from repro.sparse.mesh import mesh_counted_price
-    from repro.sparse.partition import partition_fiber_lengths
 
     be = backends.get(backend or "psram-stream", config)
     arr = be.config
@@ -218,23 +219,16 @@ def _sparse_report(workload, backend, config, n_arrays, fabric=None, *,
         n_arrays = workload.n_arrays
         fabric = workload.fabric if workload.fabric is not None else fabric
         out_rows = workload.out_rows
-    extra: dict = {}
-    if legacy:
-        ps = partition_fiber_lengths(
-            workload.fiber_lengths, n_arrays, workload.rank, arr)
-        counts = ps.counts
-        time_s = ps.critical_path_cycles / (arr.frequency_ghz * 1e9)
-    else:
-        price, ps = mesh_counted_price(
-            workload.fiber_lengths, workload.rank, arr, n_arrays=n_arrays,
-            fabric=fabric, out_rows=out_rows)
-        counts = price.counts
-        time_s = price.duration_s(arr)
-        extra = {
-            "makespan_cycles": price.makespan_cycles,
-            "reduce_cycles": price.reduce_cycles,
-            "n_arrays": price.n_arrays,
-        }
+    price, ps = mesh_counted_price(
+        workload.fiber_lengths, workload.rank, arr, n_arrays=n_arrays,
+        fabric=fabric, out_rows=out_rows)
+    counts = price.counts
+    time_s = price.duration_s(arr)
+    extra = {
+        "makespan_cycles": price.makespan_cycles,
+        "reduce_cycles": price.reduce_cycles,
+        "n_arrays": price.n_arrays,
+    }
     energy = sum((program_energy(p) for p in ps.programs[1:]),
                  program_energy(ps.programs[0]))
     return {
@@ -250,39 +244,46 @@ def _sparse_report(workload, backend, config, n_arrays, fabric=None, *,
     }
 
 
-def photonic_offload_report(cfg, batch: int = 1, psram_config=None,
-                            fidelity: bool = True):
-    """Deprecated adapter — use :func:`offload_report` with an ArchConfig."""
-    warnings.warn(
-        "photonic_offload_report is deprecated; use "
+# The PR 4/PR 7 deprecation adapters are gone — raise a pointed error
+# instead of a bare AttributeError so pinned callers learn the replacement.
+_REMOVED = {
+    "photonic_offload_report":
+        "was removed in PR 9 (deprecated since PR 4); use "
         "serve.offload_report(arch_cfg, backend=...)",
-        DeprecationWarning, stacklevel=2,
-    )
-    return offload_report(cfg, config=psram_config, batch=batch,
-                          fidelity=fidelity)
-
-
-def sparse_offload_report(fiber_lengths, rank: int = 32, psram_config=None,
-                          n_arrays: int = 1):
-    """Deprecated adapter — use :func:`offload_report` with a fiber-length
-    array or SparseMTTKRPWorkload."""
-    warnings.warn(
-        "sparse_offload_report is deprecated; use "
+    "sparse_offload_report":
+        "was removed in PR 9 (deprecated since PR 4); use "
         "serve.offload_report(fiber_lengths, backend=..., n_arrays=...)",
-        DeprecationWarning, stacklevel=2,
-    )
-    from repro.core.perf_model import SparseMTTKRPWorkload
-
-    # the pre-mesh numbers: nnz-balanced split, no reduction cost — kept
-    # frozen so baselines pinned against this adapter keep reproducing
-    return _sparse_report(
-        SparseMTTKRPWorkload(fiber_lengths=fiber_lengths, rank=rank),
-        None, psram_config, n_arrays, legacy=True)
+}
 
 
-def make_serve_step(cfg):
-    """serve_step(params, cache, token, cache_pos) -> (logits, new_cache)."""
+def __getattr__(name):
+    if name in _REMOVED:
+        raise AttributeError(f"repro.serve.{name} {_REMOVED[name]}")
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")
+
+
+def make_serve_step(cfg, *, deltas: bool = False):
+    """serve_step(params, cache, token, cache_pos) -> (logits, new_cache).
+
+    ``cache_pos`` may be a scalar (whole batch at one position — the
+    classic ``ServeEngine`` loop) or a ``(B,)`` vector (continuous
+    batching: every row at its own length). With ``deltas=True`` the step
+    returns ``(logits, deltas)`` instead of a written-back cache — the
+    paged serve loop scatters the per-layer one-token deltas into its
+    physical page slab itself.
+    """
     mod = get_module(cfg)
+    if deltas:
+        if not hasattr(mod, "decode_step_deltas"):
+            raise ValueError(
+                f"family {cfg.family!r} has no delta-form decode step; the "
+                "paged serve loop supports decoder-only families")
+
+        def step(params, cache, token, cache_pos):
+            return mod.decode_step_deltas(params, cache, token, cache_pos, cfg)
+
+        return step
 
     def step(params, cache, token, cache_pos):
         return mod.decode_step(params, cache, token, cache_pos, cfg)
@@ -290,8 +291,25 @@ def make_serve_step(cfg):
     return step
 
 
-def make_prefill(cfg, cache_len: int):
+def make_prefill(cfg, cache_len: int | None = None, *, paged: bool = False):
+    """Prefill builder. The classic form needs ``cache_len`` and returns
+    (last-token logits, cache padded to cache_len). ``paged=True`` returns
+    ``prefill(params, tokens, last)`` — logits at traced index ``last``
+    (prompts are right-padded to a compile bucket) and UNPADDED caches for
+    the serve loop to scatter into its page slab."""
     mod = get_module(cfg)
+    if paged:
+        if not hasattr(mod, "prefill_paged"):
+            raise ValueError(
+                f"family {cfg.family!r} has no paged prefill; the paged "
+                "serve loop supports decoder-only families")
+
+        def prefill(params, tokens, last):
+            return mod.prefill_paged(params, tokens, cfg, last)
+
+        return prefill
+    if cache_len is None:
+        raise ValueError("cache_len is required for the dense prefill")
     if cfg.family == "encdec":
         def prefill(params, frames, tokens):
             return mod.prefill(params, frames, tokens, cfg, cache_len=cache_len)
@@ -354,16 +372,6 @@ class ServeEngine:
             self.cfg, backend=backend, config=config,
             batch=1 if batch is None else batch, fidelity=fidelity,
         )
-
-    def photonic_offload_report(self, batch: int | None = None, psram_config=None,
-                                fidelity: bool = True):
-        """Deprecated adapter — use :meth:`offload_report`."""
-        warnings.warn(
-            "ServeEngine.photonic_offload_report is deprecated; use "
-            "ServeEngine.offload_report", DeprecationWarning, stacklevel=2,
-        )
-        return self.offload_report(config=psram_config, batch=batch,
-                                   fidelity=fidelity)
 
     @staticmethod
     def _sample(logits, temperature, key, i):

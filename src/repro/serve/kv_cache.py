@@ -57,7 +57,15 @@ class PagedKVManager:
 
     # ------------------------------------------------------------- decoding
     def extend(self, rid: int, new_tokens: int = 1) -> bool:
-        """Grow a sequence; allocates a page when it crosses a boundary."""
+        """Grow a sequence; allocates a page when it crosses a boundary.
+
+        An unknown ``rid`` raises ``KeyError`` before any allocation — a
+        typo'd id must not pop pages off the free list for a table nobody
+        owns."""
+        if rid not in self.tables:
+            raise KeyError(
+                f"unknown request id {rid!r}: extend() is only valid for "
+                "admitted requests")
         cur = self.lengths[rid]
         need = self.pages_needed(cur + new_tokens) - len(self.tables[rid])
         if need > len(self.free):
@@ -68,7 +76,13 @@ class PagedKVManager:
         return True
 
     def free_request(self, rid: int):
-        self.free.extend(self.tables.pop(rid))
+        """Release a request's pages. A never-admitted (or already freed)
+        ``rid`` is a no-op — the serve loop frees on every exit path
+        (finish, preempt, reject) without tracking which ran first."""
+        pages = self.tables.pop(rid, None)
+        if pages is None:
+            return
+        self.free.extend(pages)
         self.lengths.pop(rid)
 
     # ------------------------------------------------------------ addressing
@@ -82,9 +96,14 @@ class PagedKVManager:
         ).reshape(-1)
         return slots[:length]
 
+    @property
+    def allocated_pages(self) -> int:
+        """Pages currently owned by live requests — 0 at full drain (the
+        serve loop's leak check)."""
+        return self.cfg.num_pages - len(self.free)
+
     def utilization(self) -> float:
-        used = self.cfg.num_pages - len(self.free)
-        return used / self.cfg.num_pages
+        return self.allocated_pages / self.cfg.num_pages
 
     def fragmentation(self) -> float:
         """Allocated-but-unwritten fraction (internal fragmentation)."""

@@ -41,7 +41,7 @@ from repro.core.perf_model import (
     stream_counts,
 )
 from repro.launch.mesh import make_array_mesh
-from repro.serve.engine import offload_report, sparse_offload_report
+from repro.serve.engine import offload_report
 from repro.sparse import (
     PLANNERS,
     csf_for_mode,
@@ -259,23 +259,20 @@ def test_offload_report_mesh_keys(fibers):
         MeshFabric(reduce_words=64).allreduce_cycles(len(fibers), 16, 4)
 
 
-def test_deprecated_sparse_report_keeps_old_numbers(fibers):
-    rep = offload_report(fibers, rank=16)
-    with pytest.deprecated_call():
-        old = sparse_offload_report(fibers, rank=16)
-    # at one array the legacy nnz cut and the mesh plan coincide: one
-    # partition, no reduction — the pinned cycles keep reproducing
-    assert old["cycles"] == rep["cycles"]
-    assert old["time_s"] == pytest.approx(rep["time_s"])
-    # but the legacy path never learns the mesh vocabulary
-    assert "makespan_cycles" not in old
-    with pytest.deprecated_call():
-        old4 = sparse_offload_report(fibers, rank=16, n_arrays=4)
-    # legacy multi-array time is the nnz cut's critical path, reduce-free
-    ps = partition_fiber_lengths(fibers, 4, 16)
-    cfg = backends.resolve_config(None)
-    assert old4["time_s"] == pytest.approx(
-        ps.critical_path_cycles / (cfg.frequency_ghz * 1e9))
+def test_removed_sparse_report_names_replacement():
+    # the PR 4-era adapter is gone; the error must name the replacement so
+    # pinned callers know where the numbers moved
+    import repro.serve as serve
+    import repro.serve.engine as engine
+
+    for mod in (serve, engine):
+        with pytest.raises(AttributeError, match="removed in PR 9"):
+            mod.sparse_offload_report
+        with pytest.raises(AttributeError, match="offload_report"):
+            mod.sparse_offload_report
+        # unknown names still raise the ordinary message
+        with pytest.raises(AttributeError, match="no attribute"):
+            mod.definitely_not_an_attr
 
 
 # --------------------------------------------------- multi-device (8 dev)

@@ -105,6 +105,66 @@ def test_fragmentation_metric():
     assert m.fragmentation() == pytest.approx(7 / 8)
 
 
+def test_free_unknown_rid_is_noop():
+    # the serve loop frees on every exit path (finish, preempt, reject)
+    # without tracking which ran first — double/early frees must not throw
+    # and must not invent pages
+    m = PagedKVManager(PagedCacheConfig(num_pages=4, page_size=4))
+    m.free_request(99)                        # never admitted
+    assert len(m.free) == 4
+    m.admit(1, prompt_len=4)
+    m.free_request(1)
+    m.free_request(1)                         # second free: no-op
+    assert sorted(m.free) == [0, 1, 2, 3]
+    assert m.allocated_pages == 0
+
+
+def test_extend_unknown_rid_raises_without_corruption():
+    m = PagedKVManager(PagedCacheConfig(num_pages=4, page_size=2))
+    m.admit(1, prompt_len=2)
+    free_before = list(m.free)
+    with pytest.raises(KeyError, match="unknown request id"):
+        m.extend(2, 1)
+    # the failed call must not have popped pages or grown any table
+    assert m.free == free_before
+    assert m.tables == {1: m.tables[1]}
+    assert m.lengths == {1: 2}
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 7),
+                          st.integers(1, 9)), max_size=60),
+       st.integers(1, 12), st.integers(1, 8))
+def test_paged_churn_conserves_pages(ops, num_pages, page_size):
+    """Property: under arbitrary admit/extend/evict churn, pages are
+    conserved, no two live requests share a physical slot, and the
+    utilization/fragmentation gauges stay in range."""
+    m = PagedKVManager(PagedCacheConfig(num_pages=num_pages,
+                                        page_size=page_size))
+    for op, rid, n in ops:
+        if op == 0:
+            m.admit(rid, prompt_len=n)
+        elif op == 1 and rid in m.tables:
+            m.extend(rid, n)
+        elif op == 2:
+            m.free_request(rid)
+        # pages conserved: every page is free or owned by exactly one rid
+        owned = [p for t in m.tables.values() for p in t]
+        assert len(owned) == len(set(owned))
+        assert sorted(owned + m.free) == list(range(num_pages))
+        assert m.allocated_pages == len(owned)
+        # no physical slot is shared between live requests
+        slots = [s for r in m.tables for s in m.physical_slots(r).tolist()]
+        assert len(slots) == len(set(slots))
+        assert 0.0 <= m.utilization() <= 1.0
+        assert 0.0 <= m.fragmentation() < 1.0
+        for r, t in m.tables.items():
+            assert m.pages_needed(m.lengths[r]) == len(t)
+    for r in list(m.tables):
+        m.free_request(r)
+    assert m.allocated_pages == 0             # full drain leaks nothing
+
+
 # ----------------------------------------------------- elastic re-shard load
 
 def test_elastic_restore_across_shardings(tmp_path, key):

@@ -248,7 +248,7 @@ def test_mttkrp_scheduled_mode_generic():
 
 def test_serve_offload_report():
     from repro.models.config import ArchConfig
-    from repro.serve.engine import offload_report, photonic_offload_report
+    from repro.serve.engine import offload_report
     cfg = ArchConfig(name="t", num_layers=2, d_model=128, n_heads=2,
                      n_kv_heads=2, head_dim=64, d_ff=256, vocab_size=512)
     rep = offload_report(cfg)
@@ -264,7 +264,7 @@ def test_serve_offload_report():
     repa = offload_report(cfg, backend="analytical")
     assert repa["cycles"] == rep["cycles"]
     assert repa["projection_rel_err"] is None
-    # the pre-registry name survives as a deprecation adapter
-    with pytest.deprecated_call():
-        old = photonic_offload_report(cfg, fidelity=False)
-    assert old["cycles"] == rep["cycles"]
+    # the pre-registry adapter was removed in PR 9: pointed error
+    import repro.serve.engine as engine
+    with pytest.raises(AttributeError, match="removed in PR 9"):
+        engine.photonic_offload_report

@@ -560,7 +560,7 @@ def test_cp_als_psram_container_converges():
 # ----------------------------------------------------------- serve pricing
 
 def test_sparse_offload_report():
-    from repro.serve.engine import offload_report, sparse_offload_report
+    from repro.serve.engine import offload_report
 
     f = powerlaw_fiber_lengths(1, 2000, 20_000, alpha=1.2)
     rep = offload_report(f, rank=16)
@@ -574,7 +574,3 @@ def test_sparse_offload_report():
     rep4 = offload_report(f, rank=16, n_arrays=4)
     assert rep4["time_s"] < rep["time_s"]
     assert rep4["imbalance"] >= 1.0
-    # the pre-registry name survives as a deprecation adapter
-    with pytest.deprecated_call():
-        old = sparse_offload_report(f, rank=16)
-    assert old["cycles"] == rep["cycles"]

@@ -686,6 +686,113 @@ def bench_serve(smoke: bool = False):
                 "serve", meta=meta)
 
 
+def bench_faults(smoke: bool = False):
+    """Fault tolerance (repro.faults): disabled-hook overhead, ABFT
+    detection overhead, recovery latency, and degraded-mode throughput.
+
+    Rows are tagged ``backend="fault"`` and are **presence-gated, not
+    ratio-gated** (same contract as ``serve_``): `check_regression.py
+    --require-prefixes fault_` fails CI if they disappear, while the ratio
+    gate's --backends list excludes ``fault`` because recovery wall time is
+    retry-count-shaped, not throughput-shaped.
+    """
+    import numpy as np
+
+    from repro import faults
+    from repro.faults import plan as plan_mod
+    from repro.core.schedule import build_matmul_program, count_cycles, execute
+    from repro.configs.psram_mttkrp import CONFIG
+    from repro.sparse.formats import COO, csf_for_mode
+    from repro.sparse.mesh import mesh_stream_mttkrp
+
+    if not selected("fault"):
+        return
+    suffix = "_smoke" if smoke else ""
+    cfg = CONFIG.array
+    rng = np.random.default_rng(0)
+    m, k, n = (8, 64, 96) if smoke else (16, 256, 256)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    prog = build_matmul_program(m, k, n, cfg)
+    clean = np.asarray(execute(prog, x, w))
+
+    # -- fault_overhead: the hooks cost one module-global read when no plan
+    # is armed; measure that read against the executor call it guards
+    us_exec = _time(execute, prog, x, w)
+    reads = 10 ** 6
+    t0 = time.perf_counter()
+    for _ in range(reads):
+        if plan_mod._ACTIVE is not None:
+            raise AssertionError
+    hook_ns = (time.perf_counter() - t0) / reads * 3 * 1e9  # 3 reads/execute
+    a_us, b_us = _time_interleaved(
+        [lambda: execute(prog, x, w), lambda: execute(prog, x, w)])
+    row(f"fault_overhead{suffix}", us_exec,
+        f"hook={hook_ns:.0f}ns/call frac={hook_ns / (us_exec * 1e3):.1e} "
+        f"ab_noise={a_us / b_us:.3f}x armed=False", "fault")
+
+    # -- fault_detect: ABFT checksum drive on a clean run (no faults):
+    # zero detections, overhead = checksum cycles / program cycles
+    us_abft = _time(lambda: faults.abft_matmul(x, w, cfg), n=3, warmup=1)
+    y, rep = faults.abft_matmul(x, w, cfg)
+    prog_cycles = count_cycles(prog).total_cycles
+    row(f"fault_detect{suffix}", us_abft,
+        f"detected={len(rep.detected)} checked={rep.checked} "
+        f"cycle_overhead={rep.checksum_cycles / prog_cycles:.3f} "
+        f"wall_overhead={us_abft / us_exec:.2f}x rel_tol={rep.rel_tol}",
+        "fault")
+
+    # -- fault_recover: persistent stuck-MSB faults — detect, retries
+    # exhaust, fault-suppressed fallback; corrected output matches clean
+    plan = faults.FaultPlan(seed=7, stuck_bits=(faults.StuckBit(rate=5e-3),))
+
+    def recover():
+        with faults.inject(plan):
+            return faults.abft_matmul(x, w, cfg)
+
+    us_rec = _time(recover, n=3, warmup=1)
+    y2, rep2 = recover()
+    err = float(np.max(np.abs(np.asarray(y2) - clean))
+                / max(np.max(np.abs(clean)), 1e-9))
+    row(f"fault_recover{suffix}", us_rec,
+        f"detected={len(rep2.detected)} retries={rep2.retries} "
+        f"fallbacks={rep2.fallbacks} "
+        f"recovery_cycles={rep2.recovery_cycles} "
+        f"recovery_s={rep2.recovery_s(cfg):.2e} rel_err={err:.1e}", "fault",
+        meta={"seed": plan.seed, "stuck_rate": 5e-3, "shape": [m, k, n]})
+
+    # -- fault_degraded: one of 4 arrays dead mid-MTTKRP — recover the lost
+    # fiber ranges on survivors (bit-identical) and re-plan; throughput_frac
+    # is the honest capacity hit the serve scheduler consumes
+    shape = (64, 48, 40) if smoke else (256, 192, 160)
+    nnz = 2000 if smoke else 20000
+    idx = np.stack([rng.integers(0, s, nnz) for s in shape], 1)
+    coo = COO(indices=jnp.asarray(idx.astype(np.int32)),
+              values=jnp.asarray(rng.normal(size=nnz).astype(np.float32)),
+              shape=shape)
+    factors = tuple(jnp.asarray(rng.normal(size=(s, 32)).astype(np.float32))
+                    for s in shape)
+    csf = csf_for_mode(coo, 0)
+    loss = faults.FaultPlan(seed=0, array_loss=(faults.ArrayLoss(2),))
+
+    def degraded():
+        with faults.inject(loss):
+            return faults.degraded_mesh_mttkrp(csf, factors, config=cfg,
+                                               n_arrays=4)
+
+    us_deg = _time(degraded, n=3, warmup=1)
+    yd, drep = degraded()
+    ref = np.asarray(mesh_stream_mttkrp(csf, factors, cfg, n_arrays=1))
+    bitident = bool((np.asarray(yd) == ref).all())
+    row(f"fault_degraded{suffix}", us_deg,
+        f"dead={len(drep.dead)}/{drep.n_arrays} "
+        f"throughput_frac={drep.throughput_frac:.2f} "
+        f"recovered_rows={drep.recovered_rows} "
+        f"recovery_cycles={drep.recovery_cycles} bitident={bitident}",
+        "fault", meta={"nnz": nnz, "shape": list(shape), "rank": 32})
+    assert bitident, "degraded recovery drifted from the survivors-only plan"
+
+
 def bench_scaling():
     """Beyond-paper: the 'scalable engine' (paper SIII) quantified — arrays
     scale linearly until the engine fabric saturates at the knee."""
@@ -742,6 +849,7 @@ def main(argv=None) -> None:
     bench_backend_matrix(smoke=args.smoke)
     bench_mesh(smoke=args.smoke)
     bench_serve(smoke=args.smoke)
+    bench_faults(smoke=args.smoke)
     bench_scaling()
     if args.json:
         with open(args.json, "w") as f:

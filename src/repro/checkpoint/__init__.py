@@ -1,1 +1,1 @@
-from .manager import CheckpointManager
+from .manager import CheckpointError, CheckpointManager

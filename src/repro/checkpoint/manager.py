@@ -29,6 +29,13 @@ import jax.numpy as jnp
 import numpy as np
 
 
+class CheckpointError(RuntimeError):
+    """A committed checkpoint could not be loaded (truncated archive,
+    missing/mismatched leaves, unreadable metadata). The ``done`` marker
+    promises the *save* completed; this error means the bytes on disk no
+    longer honor that promise — pick an older step or re-save."""
+
+
 def _flatten_with_paths(tree):
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     return [("/".join(str(k) for k in path), leaf) for path, leaf in flat]
@@ -119,14 +126,30 @@ class CheckpointManager:
         if step is None:
             raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
         sdir = os.path.join(self.dir, f"step_{step:09d}")
-        data = np.load(os.path.join(sdir, f"arrays_h{self.host_index}.npz"))
-        meta = json.load(open(os.path.join(sdir, "tree.json")))
-        by_path = {p: data[f"a{i}"] for i, p in enumerate(meta["paths"])}
+        npz = os.path.join(sdir, f"arrays_h{self.host_index}.npz")
+        try:
+            data = np.load(npz)
+            with open(os.path.join(sdir, "tree.json")) as f:
+                meta = json.load(f)
+            by_path = {p: data[f"a{i}"] for i, p in enumerate(meta["paths"])}
+        except CheckpointError:
+            raise
+        except Exception as e:  # zipfile/json/KeyError: damaged bytes
+            raise CheckpointError(
+                f"checkpoint step {step} at {sdir} is corrupt or truncated "
+                f"({type(e).__name__}: {e})") from e
         flat = _flatten_with_paths(like_tree)
         leaves = []
         for path, like in flat:
-            arr = by_path[path]
-            assert tuple(arr.shape) == tuple(np.shape(like)), (path, arr.shape, np.shape(like))
+            arr = by_path.get(path)
+            if arr is None:
+                raise CheckpointError(
+                    f"checkpoint step {step} is missing leaf {path!r} — "
+                    "the saved tree does not match like_tree")
+            if tuple(arr.shape) != tuple(np.shape(like)):
+                raise CheckpointError(
+                    f"checkpoint step {step} leaf {path!r} has shape "
+                    f"{tuple(arr.shape)}, expected {tuple(np.shape(like))}")
             leaves.append(arr)
         treedef = jax.tree.structure(like_tree)
         tree = jax.tree.unflatten(treedef, leaves)

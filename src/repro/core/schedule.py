@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import obs
+from repro.faults import plan as _faults
 
 from .psram import PsramArray, PsramConfig
 from .quantization import ADCConfig, QMAX, adc_requantize, quantize_symmetric
@@ -469,6 +470,12 @@ def _execute_tiles(x, w, *, rows, cols, wav, kt, nt, mt, adc_bits, saturate):
     # as store() does (the bit-plane round trip is the identity on int8)
     wt = wp.reshape(kt, rows, nt, cols).transpose(0, 2, 1, 3)   # (kt,nt,rows,cols)
     qw, sw = quantize_symmetric(wt, axis=2)                     # sw (kt,nt,1,cols)
+    # fault hook (zero-cost when disarmed): stuck cells corrupt the words as
+    # stored. np conversion is deliberate — under jit tracing it raises
+    # rather than baking the fault mask into a compilation cache entry.
+    plan = _faults._ACTIVE
+    if plan is not None and plan.touches_array_path:
+        qw = jnp.asarray(_faults.corrupt_stored(plan, qw))
     # stacked Drives: quantize each chunk's vectors per row over the K-tile
     xt = xp.reshape(mt, wav, kt, rows).transpose(0, 2, 1, 3)    # (mt,kt,wav,rows)
     qx, sx = quantize_symmetric(xt, axis=3)                     # sx (mt,kt,wav,1)
@@ -485,6 +492,11 @@ def _execute_tiles(x, w, *, rows, cols, wav, kt, nt, mt, adc_bits, saturate):
     )  # (kt, mt*wav, nt*cols)
     acc = acc.reshape(kt, mt, wav, nt, cols).transpose(0, 1, 3, 2, 4)
     full_scale = float(QMAX) * float(QMAX) * rows
+    # fault hook: drive-path faults land on the analog accumulation, pre-ADC
+    # (laser drift, dead WDM channels on axis 3, transient spikes)
+    if plan is not None and plan.touches_array_path:
+        acc = jnp.asarray(_faults.corrupt_analog(plan, acc, full_scale,
+                                                 channel_axis=3))
     acc = adc_requantize(acc, ADCConfig(bits=adc_bits, saturate=saturate), full_scale)
     sxb = sx.transpose(1, 0, 2, 3)[:, :, None]      # (kt,mt,1,wav,1)
     swb = sw[:, None]                               # (kt,1,nt,1,cols)
@@ -544,6 +556,10 @@ def execute(program: TileProgram, x: jax.Array, w: jax.Array,
                   compiled=compiled):
         if obs.enabled():
             obs.counter("schedule/programs_executed")
+        if compiled and _faults._ACTIVE is not None:
+            # faults act on the eager oracle; the jitted executor would bake
+            # the corruption into its XLA compilation cache entry
+            compiled = False
         if compiled:
             return compiled_matmul_executor(m, k, n, cfg)(x, w)
         return _execute_tiles(

@@ -25,6 +25,7 @@ import dataclasses
 import json
 import math
 import os
+import warnings
 
 import jax
 
@@ -245,11 +246,34 @@ def save_cache(path: str) -> int:
 def load_cache(path: str) -> int:
     """Merge a saved winner table. Entries are matched lazily by token:
     a loaded winner is installed for a live :class:`TuneKey` the first time
-    :func:`get_params` asks for it. Returns the number of entries loaded."""
+    :func:`get_params` asks for it. Returns the number of entries loaded.
+
+    A corrupt or truncated cache file is a warning, not an error: tuned
+    winners are an optimization, so a damaged table must never take the
+    deployment down — the heuristic defaults stay in force and 0 is
+    returned. A missing file still raises (a wrong path is a caller bug).
+    """
     with open(path) as f:
-        loaded = json.load(f)
-    _LOADED.update(loaded)
-    return len(loaded)
+        try:
+            loaded = json.load(f)
+        except (json.JSONDecodeError, UnicodeDecodeError) as e:
+            warnings.warn(
+                f"autotune cache {path!r} is corrupt ({e}); ignoring it — "
+                "heuristic defaults stay in force", stacklevel=2)
+            return 0
+    if not isinstance(loaded, dict):
+        warnings.warn(
+            f"autotune cache {path!r} holds {type(loaded).__name__}, not a "
+            "winner table; ignoring it", stacklevel=2)
+        return 0
+    good = {k: v for k, v in loaded.items()
+            if isinstance(k, str) and isinstance(v, dict)}
+    if len(good) != len(loaded):
+        warnings.warn(
+            f"autotune cache {path!r}: dropped {len(loaded) - len(good)} "
+            "malformed entries", stacklevel=2)
+    _LOADED.update(good)
+    return len(good)
 
 
 _LOADED: dict[str, dict] = {}

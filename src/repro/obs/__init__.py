@@ -30,7 +30,7 @@ levels, lowercase:
 
 * **layer** — the subsystem: ``backend``, ``schedule``, ``stream``,
   ``mesh``, ``als``, ``autotune``, ``train``, ``serve``, ``bench``,
-  ``obs``.
+  ``obs``, ``fault``.
 * **component** — the object or phase within it: a backend name
   (``backend/psram-stream/...``), an executor (``schedule/execute``), a
   loop phase (``als/sweep``), a tuning key (``autotune/trial``).
@@ -54,6 +54,21 @@ decision), ``serve/evict`` (rid of the preempted row); counters
 serve run therefore shows the admission queue, each batch's step, and
 every preemption as stacked slices on the wall-clock track, next to the
 virtual mesh timelines.
+
+The fault-tolerance stack (:mod:`repro.faults`) instruments under the
+``fault`` layer, split by phase: spans ``fault/inject/armed`` (args: seed
+and per-kind fault counts, open for the whole injected extent),
+``fault/abft/check`` (kind: matmul|mttkrp — the checksum drive + compare),
+``fault/abft/redrive`` (tile or fiber group, attempt), ``fault/abft/
+fallback`` (the fault-suppressed recompute after retries exhaust),
+``fault/mesh/shard_values`` (the per-shard corruption hook), ``fault/mesh/
+degraded`` and ``fault/mesh/redrive`` (dead-array recovery), ``serve/fail``
+(rid, reason — deadline/preempt-limit failures); counters
+``fault/injected``, ``fault/detected``, ``fault/redrives``,
+``fault/recovered``, ``fault/recovery_cycles``, ``fault/arrays_lost``,
+``fault/recovered_rows``, ``serve/failed``. The injection hooks follow the
+same zero-cost discipline as the null span: one module-global read when no
+plan is armed.
 
 The tracer is zero-cost when disabled: ``span()`` returns a shared no-op
 context manager without reading a clock (overhead asserted in

@@ -84,6 +84,14 @@ class ServeLoopConfig:
     speedup: float = 1.0          # arrival-time compression: wall = sim/speedup
     min_bucket: int = 8           # smallest pad/view bucket (powers of two up)
     idle_poll_s: float = 0.0005   # engine sleep when nothing is runnable
+    max_preemptions: int = 8      # evictions per request before it fails
+                                  # cleanly ("preempt-limit") — page pressure
+                                  # can delay a request but never livelock it
+    deadline_s: float | None = None  # per-request wall deadline since arrival
+                                     # (post-speedup); None = no timeouts.
+                                     # Overdue queued requests are shed at
+                                     # admission, overdue active rows fail
+                                     # and free their pages ("deadline")
 
 
 @dataclasses.dataclass
@@ -100,6 +108,8 @@ class RequestRecord:
     n_generated: int = 0
     preemptions: int = 0
     rejected: bool = False
+    failed: bool = False
+    failure: str | None = None    # "preempt-limit" | "deadline" when failed
     tokens: list[int] = dataclasses.field(default_factory=list)
 
     @property
@@ -142,6 +152,10 @@ class ServeReport:
     def rejected(self) -> list[RequestRecord]:
         return [r for r in self.records if r.rejected]
 
+    @property
+    def failed(self) -> list[RequestRecord]:
+        return [r for r in self.records if r.failed]
+
     def _pct(self, values, q) -> float:
         return float(np.percentile(np.asarray(values), q)) if values else 0.0
 
@@ -181,9 +195,14 @@ class ServeReport:
         """JSON-ready aggregate view — what the serve_* bench rows record."""
         modeled = [o["modeled_s"] for o in self.offload]
         measured = [o["measured_s"] for o in self.offload]
+        failures: dict[str, int] = {}
+        for r in self.failed:
+            failures[r.failure or "?"] = failures.get(r.failure or "?", 0) + 1
         return {
             "completed": len(self.completed),
             "rejected": len(self.rejected),
+            "failed": len(self.failed),
+            "failure_reasons": failures,
             "preemptions": self.preemptions,
             "leaked_pages": self.leaked_pages,
             "duration_s": self.duration_s,
@@ -396,10 +415,41 @@ class ServeLoop:
             active[a.row] = None
             free_rows.append(a.row)
 
+        def fail(rid: int, reason: str):
+            rec = records[rid]
+            rec.failed = True
+            rec.failure = reason
+            obs.counter("serve/failed")
+            with obs.span("serve/fail", rid=rid, reason=reason):
+                pass
+
+        def fail_active(a: _Active, reason: str):
+            fail(a.req.rid, reason)
+            records[a.req.rid].n_generated = len(a.generated)
+            self.kv.free_request(a.req.rid)
+            active[a.row] = None
+            free_rows.append(a.row)
+
+        def overdue(rid: int) -> bool:
+            if lc.deadline_s is None:
+                return False
+            arr = records[rid].arrival_s
+            return arr is not None and now() - arr > lc.deadline_s
+
         try:
             while not (done_producing.is_set() and not queue
                        and all(a is None for a in active)):
                 progressed = False
+
+                # -- deadlines: shed overdue queued work, time out live rows
+                if lc.deadline_s is not None:
+                    while queue and overdue(queue[0].rid):
+                        fail(queue.popleft().rid, "deadline")
+                        progressed = True
+                    for a in list(active):
+                        if a is not None and overdue(a.req.rid):
+                            fail_active(a, "deadline")
+                            progressed = True
 
                 # -- admit: FIFO, head-of-line blocking ---------------------
                 with obs.span("serve/admit", queued=len(queue)):
@@ -450,10 +500,17 @@ class ServeLoop:
                             self.kv.free_request(victim.req.rid)
                             active[victim.row] = None
                             free_rows.append(victim.row)
-                            queue.appendleft(victim.req)
-                            records[victim.req.rid].preemptions += 1
+                            rec_v = records[victim.req.rid]
+                            rec_v.preemptions += 1
                             preemptions += 1
                             obs.counter("serve/preempted")
+                            if rec_v.preemptions > lc.max_preemptions:
+                                # bounded retries exhausted: fail cleanly
+                                # instead of requeueing — page pressure can
+                                # never livelock the loop
+                                fail(victim.req.rid, "preempt-limit")
+                            else:
+                                queue.appendleft(victim.req)
                         step_rows.pop()
 
                 if step_rows:

@@ -30,6 +30,7 @@ from __future__ import annotations
 import dataclasses
 from collections import Counter
 
+from repro import obs
 from repro.backends.base import resolve_config
 from repro.core.perf_model import (
     MeshFabric,
@@ -166,3 +167,28 @@ class OffloadScheduler:
         prev = self._host_ema.get(batch)
         self._host_ema[batch] = measured_s if prev is None else \
             (1.0 - self.ema) * prev + self.ema * measured_s
+
+    # ----------------------------------------------------------- degraded
+    def mark_array_failed(self, n: int = 1) -> int:
+        """An array dropped off the mesh: shrink capacity and re-price.
+
+        Every cached decode price is keyed on ``n_arrays``, so clearing the
+        cache makes the next ``decide_decode`` re-bill against the smaller
+        mesh — the modeled pSRAM makespan grows, and where it now loses to
+        the measured host EMA the decision flips to host execution (the
+        host-EMA fallback). The host EMA itself is capacity-independent and
+        survives. Returns the surviving array count; the last array cannot
+        be failed away (a meshless scheduler prices nothing).
+        """
+        if n < 1:
+            raise ValueError("must fail at least one array")
+        survivors = self.n_arrays - int(n)
+        if survivors < 1:
+            raise ValueError(
+                f"cannot fail {n} of {self.n_arrays} arrays: at least one "
+                "must survive")
+        self.n_arrays = survivors
+        self._decode_prices.clear()
+        if obs.enabled():
+            obs.counter("fault/arrays_lost", n)
+        return survivors

@@ -45,6 +45,7 @@ from repro import obs
 from repro.backends.base import resolve_config
 from repro.core.mttkrp import cp_chain_exact, cp_chain_psram
 from repro.core.psram import PsramConfig
+from repro.faults import plan as _faults
 
 from .formats import CSF
 from .partition import MeshedSparseTensor, partition_csf
@@ -148,6 +149,24 @@ def _blocked_shard_stack(meshed: MeshedSparseTensor, out_rows: int,
         sps.append(s3.reshape(nb, e * n_seg).astype(np.int32))
     return (jnp.asarray(np.stack(ips)), jnp.asarray(np.stack(vps)),
             jnp.asarray(np.stack(lps)), jnp.asarray(np.stack(sps)), n_seg)
+
+
+def _faulty_values(vp):
+    """Per-shard fault hook (zero-cost when no plan is armed).
+
+    Applies the armed :class:`~repro.faults.plan.FaultPlan`'s shard faults
+    — dead arrays zero their stack slice, transient spikes hit surviving
+    shards — to a *copy* of the stacked values; the layouts cached on the
+    CSF are never written through, so disarming restores clean runs.
+    """
+    plan = _faults._ACTIVE
+    if plan is None or not (plan.array_loss or plan.adc_spikes):
+        return vp
+    if obs.enabled() and plan.array_loss:
+        obs.counter("fault/arrays_lost", len(plan.dead_arrays))
+    with obs.span("fault/mesh/shard_values", arrays=int(vp.shape[0]),
+                  dead=len(plan.dead_arrays)):
+        return jnp.asarray(_faults.corrupt_shard_values(plan, vp))
 
 
 def _mesh_layout(csf: CSF, meshed: MeshedSparseTensor, lowering: str,
@@ -288,10 +307,12 @@ def mesh_stream_mttkrp(
                   lowering=lowering, planner=planner, mode=mode):
         if lowering == "eager":
             ip, rp, vp = _mesh_layout(csf, meshed, lowering, rows, eb)
+            vp = _faulty_values(vp)
             fn = _mesh_executor(mesh, lowering, mode, out_rows, 0, psram,
                                 adc_bits)
             return fn(ip, rp, vp, tuple(factors))
         ip, vp, lp, sp, n_seg = _mesh_layout(csf, meshed, lowering, rows, eb)
+        vp = _faulty_values(vp)
         if lowering == "fused":
             from repro.kernels.stream_mttkrp import stream_factor_quants
 

@@ -103,6 +103,52 @@ def test_save_load_round_trip(tmp_path):
     assert cache_stats()[0] == 1
 
 
+def test_load_cache_tolerates_corruption(tmp_path):
+    """A damaged winner table is a warning, never an outage: the heuristic
+    defaults stay in force and tuning still works afterwards."""
+    calls = []
+    for name, payload in (("garbage.json", b"\x00\xffnot json at all"),
+                          ("truncated.json", b'{"stream|x": {"exec_b')):
+        p = tmp_path / name
+        p.write_bytes(payload)
+        with pytest.warns(UserWarning, match="corrupt"):
+            assert load_cache(str(p)) == 0
+    # legal JSON of the wrong shape is rejected the same soft way
+    wrong = tmp_path / "wrong.json"
+    wrong.write_text("[1, 2, 3]")
+    with pytest.warns(UserWarning, match="not a winner table"):
+        assert load_cache(str(wrong)) == 0
+    assert cache_stats()[0] == 0
+    # the cache layer still functions: heuristic asks and real tuning work
+    assert get_params(_key(), measure=None, tune=False) == heuristic(_key())
+    calls = []
+    get_params(_key(), measure=_fake_measure(calls), tune=True)
+    assert calls and cache_stats()[0] == 1
+
+
+def test_load_cache_drops_malformed_entries(tmp_path):
+    """Partially damaged tables keep their good rows: a valid winner saved
+    earlier survives a bad row spliced in next to it."""
+    calls = []
+    won = get_params(_key(), measure=_fake_measure(calls), tune=True)
+    path = str(tmp_path / "tune.json")
+    assert save_cache(path) == 1
+    import json
+    table = json.load(open(path))
+    table["bad-row"] = "not a params dict"
+    json.dump(table, open(path, "w"))
+    clear_autotune_cache()
+    with pytest.warns(UserWarning, match="dropped 1"):
+        assert load_cache(path) == 1
+    assert get_params(_key(), measure=None, tune=False) == won
+
+
+def test_load_cache_missing_file_raises(tmp_path):
+    # a wrong path is a caller bug, not damage — it must not be swallowed
+    with pytest.raises(FileNotFoundError):
+        load_cache(str(tmp_path / "nope.json"))
+
+
 def test_executor_cache_shared_per_key_values():
     """Equal-by-value executor keys return the *same* compiled callable
     (lru identity), distinct values a different one."""

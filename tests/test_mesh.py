@@ -314,6 +314,15 @@ f0 = factors[0]
 out["gram_ok"] = bool(np.allclose(
     np.asarray(mesh_gram(f0, n_arrays=8)), np.asarray(f0.T @ f0),
     rtol=1e-5, atol=1e-5))
+# degraded mode on the real 8-way mesh: kill an array out of 4, recover
+# its fiber range on survivors — bit-identical to the never-failed stream
+from repro import faults
+loss = faults.FaultPlan(seed=0, array_loss=(faults.ArrayLoss(1),))
+with faults.inject(loss):
+    yd, drep = faults.degraded_mesh_mttkrp(csf, factors, n_arrays=4)
+out["degraded_bitwise"] = bool(np.array_equal(ref, np.asarray(yd)))
+out["degraded_survivors"] = drep.survivors
+out["degraded_throughput_frac"] = float(drep.throughput_frac)
 csfs = [csf_for_mode(coo, m) for m in range(3)]
 fits = {}
 for name, kw in (("psram-stream", {}), ("psram-mesh", {"n_arrays": 8})):
@@ -345,6 +354,10 @@ def test_mesh_eight_devices_subprocess():
     assert out["reversed_bitwise"]
     assert out["fused_rel"] < 0.05
     assert out["gram_ok"]
+    # losing an array degrades throughput, never correctness
+    assert out["degraded_bitwise"]
+    assert out["degraded_survivors"] == 3
+    assert 0 < out["degraded_throughput_frac"] <= 1.0
     assert fits_close(out["fits"])
 
 

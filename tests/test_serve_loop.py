@@ -239,6 +239,46 @@ def test_loop_preempts_youngest_under_page_pressure(arch, params):
         obs.disable()
 
 
+def test_loop_preemption_cap_fails_cleanly(arch, params):
+    # same page-pressure collision as above, but with zero retries allowed:
+    # the first eviction must fail the victim with a recorded reason rather
+    # than requeue it — bounded preemption can never livelock the loop
+    loop = _loop(arch, params, max_batch=4, num_pages=8, page_size=4,
+                 speedup=1000.0, max_preemptions=0)
+    tc = TrafficConfig(n_requests=5, seed=3, rate_rps=500.0,
+                       prompt_min=4, prompt_max=4, decode_min=20,
+                       decode_max=20, vocab_size=arch.vocab_size)
+    rep = loop.run_sync(tc)
+    assert rep.preemptions >= 1
+    assert rep.failed and all(r.failure == "preempt-limit"
+                              for r in rep.failed)
+    assert len(rep.completed) + len(rep.failed) == 5
+    assert all(r.n_generated == 20 for r in rep.completed)
+    assert rep.leaked_pages == 0              # failure still frees pages
+    s = rep.summary()
+    assert s["failed"] == len(rep.failed)
+    assert s["failure_reasons"] == {"preempt-limit": len(rep.failed)}
+
+
+def test_loop_deadline_sheds_overdue_requests(arch, params):
+    # an absurdly tight deadline: every request is overdue by the time the
+    # shed check sees it, so the loop fails all of them with "deadline"
+    # and never decodes — admission shedding, not silent stalling
+    loop = _loop(arch, params, speedup=1000.0, deadline_s=1e-9)
+    tc = TrafficConfig(n_requests=4, seed=2, rate_rps=200.0,
+                       prompt_min=2, prompt_max=8, decode_min=2,
+                       decode_max=4, vocab_size=arch.vocab_size)
+    rep = loop.run_sync(tc)
+    assert not rep.completed
+    assert len(rep.failed) == 4
+    assert all(r.failure == "deadline" for r in rep.failed)
+    assert rep.leaked_pages == 0
+    assert rep.summary()["failure_reasons"] == {"deadline": 4}
+    # a roomy deadline changes nothing: the same stream completes
+    roomy = _loop(arch, params, speedup=1000.0, deadline_s=300.0)
+    assert len(roomy.run_sync(tc).completed) == 4
+
+
 def test_loop_rejects_never_fitting_requests(arch, params):
     loop = _loop(arch, params, max_batch=2, num_pages=8, page_size=4,
                  speedup=1000.0)

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import CheckpointError, CheckpointManager
 from repro.data import DataConfig, batch_at_step
 from repro.dist.compression import compress_int8, compress_tree, decompress_int8
 from repro.models.registry import get_config
@@ -87,6 +87,42 @@ def test_checkpoint_roundtrip_and_atomicity(key):
         assert step == 20
         np.testing.assert_allclose(np.asarray(restored["w"]), np.asarray(tree["w"]))
         assert cm.latest_step() == 20
+
+
+def test_checkpoint_corrupt_load_is_a_clear_error(key):
+    """Damaged bytes under a committed ``done`` marker must surface as
+    CheckpointError naming the step — not a zipfile/json traceback."""
+    tree = {"w": jax.random.normal(key, (8, 8)), "step": jnp.int32(3)}
+    like = {"w": jnp.zeros((8, 8)), "step": jnp.int32(0)}
+    with tempfile.TemporaryDirectory() as td:
+        cm = CheckpointManager(td)
+        cm.save(10, tree, blocking=True)
+        sdir = os.path.join(td, "step_000000010")
+        # truncated array archive
+        npz = os.path.join(sdir, "arrays_h0.npz")
+        blob = open(npz, "rb").read()
+        open(npz, "wb").write(blob[: len(blob) // 2])
+        with pytest.raises(CheckpointError, match="step 10.*corrupt"):
+            cm.restore(like)
+        open(npz, "wb").write(blob)          # heal, then damage the metadata
+        open(os.path.join(sdir, "tree.json"), "w").write('{"paths": [')
+        with pytest.raises(CheckpointError, match="corrupt or truncated"):
+            cm.restore(like)
+
+
+def test_checkpoint_tree_mismatch_is_a_clear_error(key):
+    tree = {"w": jax.random.normal(key, (8, 8))}
+    with tempfile.TemporaryDirectory() as td:
+        cm = CheckpointManager(td)
+        cm.save(5, tree, blocking=True)
+        with pytest.raises(CheckpointError, match="missing leaf"):
+            cm.restore({"v": jnp.zeros((8, 8))})
+        with pytest.raises(CheckpointError, match="shape"):
+            cm.restore({"w": jnp.zeros((4, 4))})
+        # an honest absence is still FileNotFoundError, not corruption
+        with tempfile.TemporaryDirectory() as empty:
+            with pytest.raises(FileNotFoundError):
+                CheckpointManager(empty).restore(tree)
 
 
 def test_checkpoint_keeps_n(key):
